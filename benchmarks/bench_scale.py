@@ -1,0 +1,53 @@
+"""Paper Fig. 6: STREAM SCALE, vector engine vs matrix engine.
+
+Per size: interpret-mode correctness of both Pallas kernels, the analytic
+per-engine TPU prediction (the quantity Fig. 6 plots), and XLA-CPU wall
+time of the reference as the hardware-relative signal available in this
+container.  L2-resident vs HBM-resident sizes mirror the figure's split.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import TPU_V5E, best_case_speedup
+from repro.core.intensity import scale as scale_traits
+from repro.kernels.scale.ops import scale
+from repro.kernels.scale.ref import scale_ref
+
+from .common import emit, time_fn
+
+SIZES = [2**18, 2**20, 2**22, 2**24]  # spans the v5e VMEM boundary
+
+
+def rows():
+    out = []
+    rng = np.random.default_rng(0)
+    for n in SIZES:
+        b = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        want = scale_ref(b, 1.5)
+        errs = {}
+        for eng in ("vpu", "mxu"):
+            got = scale(b, 1.5, engine=eng)
+            errs[eng] = float(jnp.max(jnp.abs(got - want)))
+        us = time_fn(lambda x: scale_ref(x, 1.5), b)
+        t = scale_traits(n, dsize=4)
+        # analytic TPU times: memory-bound either way -> T ~= Q/B
+        t_mem = t.traffic_bytes / TPU_V5E.mem_bw * 1e6
+        bound = best_case_speedup(TPU_V5E, t.intensity)
+        resident = "vmem" if 2 * n * 4 <= (TPU_V5E.l2_bytes or 0) else "hbm"
+        out.append({
+            "name": f"scale/n={n}/{resident}",
+            "us_per_call": f"{us:.1f}",
+            "derived": (f"pred_us_v5e={t_mem:.1f};mxu_ceiling={bound:.4f}x;"
+                        f"err_vpu={errs['vpu']:.2e};err_mxu={errs['mxu']:.2e}"),
+        })
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

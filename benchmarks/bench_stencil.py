@@ -1,0 +1,68 @@
+"""Paper Fig. 8 / Table 3: the stencil suite, EBISU/Brick-role (vector)
+vs ConvStencil/LoRAStencil-role (matrix banded-matmul), at the paper's
+temporal-blocking depths.
+
+`derived` reports the analytic v5e prediction per engine -- including the
+matrix path's W inflation (2*2*L per point vs 2|S|), which is the
+TPU-specific reason the ConvStencil transform loses (DESIGN.md §2.3) --
+plus interpret-mode max error vs the jnp oracle for both engines."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import TPU_V5E, attainable
+from repro.core.intensity import stencil as stencil_traits
+from repro.core.intensity import stencil_matmul
+from repro.kernels.stencil.defs import TABLE3_DEPTH, suite
+from repro.kernels.stencil.ops import stencil
+from repro.kernels.stencil.ref import stencil_ref
+
+from .common import emit, time_fn
+
+DOMAINS = {2: (512, 512), 3: (64, 64, 64)}
+BLOCK_ROWS = {2: 64, 3: 16}
+
+
+def rows():
+    out = []
+    rng = np.random.default_rng(2)
+    for name, spec in suite().items():
+        t_depth = TABLE3_DEPTH[name]
+        shape = DOMAINS[spec.ndim]
+        u = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+        want = stencil_ref(u, spec, steps=t_depth)
+        errs = {}
+        for eng in ("vpu", "mxu"):
+            got = stencil(u, spec, steps=t_depth, engine=eng,
+                          block_rows=BLOCK_ROWS[spec.ndim])
+            errs[eng] = float(jnp.max(jnp.abs(got - want)))
+        us = time_fn(lambda x: stencil_ref(x, spec, steps=t_depth), u)
+
+        npoints = int(np.prod(shape))
+        tv = stencil_traits(spec.num_points, t=t_depth, dsize=4,
+                            npoints_domain=npoints)
+        tm = stencil_matmul(spec.num_points, spec.radius, tile=128,
+                            t=t_depth, dsize=4)
+        # per-engine analytic step time: max(compute, memory)
+        t_vpu = max(tv.work_flops / TPU_V5E.vector.peak_flops,
+                    tv.traffic_bytes / TPU_V5E.mem_bw) * 1e6
+        t_mxu = max(tm.work_flops * npoints / TPU_V5E.matrix.peak_flops,
+                    tv.traffic_bytes / TPU_V5E.mem_bw) * 1e6
+        out.append({
+            "name": f"stencil/{name}/t={t_depth}/{'x'.join(map(str, shape))}",
+            "us_per_call": f"{us:.1f}",
+            "derived": (f"pred_us_vpu={t_vpu:.1f};pred_us_mxu={t_mxu:.1f};"
+                        f"I_t={tv.intensity:.3f};"
+                        f"W_inflation_mxu={tm.work_flops / (2 * spec.num_points * t_depth):.0f}x;"
+                        f"err_vpu={errs['vpu']:.2e};err_mxu={errs['mxu']:.2e}"),
+        })
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

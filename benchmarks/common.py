@@ -1,0 +1,26 @@
+"""Shared benchmark utilities: timing, CSV rows, analytic predictions."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time in microseconds (XLA-CPU; relative signal only)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(rows: List[dict]) -> None:
+    """Print ``name,us_per_call,derived`` CSV rows."""
+    for r in rows:
+        print(f"{r['name']},{r.get('us_per_call', '')},{r.get('derived', '')}")

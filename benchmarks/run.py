@@ -1,0 +1,35 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  bench_bounds   -- Table 1 + Eq. 14/23/24 (theory)
+  bench_roofline -- Fig. 2 (two-ceiling roofline placements)
+  bench_scale    -- Fig. 6 (STREAM SCALE, VPU vs MXU)
+  bench_spmv     -- Fig. 7 / Table 2 (SpMV, cuSPARSE-role vs DASP-role)
+  bench_stencil  -- Fig. 8 / Table 3 (stencil suite, both engines)
+"""
+from __future__ import annotations
+
+import sys
+
+from . import (bench_bounds, bench_roofline, bench_scale, bench_spmv,
+               bench_stencil)
+from .common import emit
+
+ALL = {
+    "bounds": bench_bounds,
+    "roofline": bench_roofline,
+    "scale": bench_scale,
+    "spmv": bench_spmv,
+    "stencil": bench_stencil,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or sorted(ALL)
+    print("name,us_per_call,derived")
+    for key in which:
+        emit(ALL[key].rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""The paper's empirical comparison end-to-end: SCALE, SpMV, and stencil,
+each on both engines, with the theory bound printed beside the result.
+
+Run:  PYTHONPATH=src python examples/kernel_showdown.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import TPU_V5E, DEFAULT_ADVISOR, best_case_speedup
+from repro.core.intensity import scale as scale_traits
+from repro.core.intensity import spmv_bell, stencil as stencil_traits
+from repro.kernels.scale.ops import scale
+from repro.kernels.scale.ref import scale_ref
+from repro.kernels.spmv.ops import dense_to_bell, spmv
+from repro.kernels.stencil.defs import TABLE3_DEPTH, suite
+from repro.kernels.stencil.ops import stencil
+from repro.kernels.stencil.ref import stencil_ref
+
+rng = np.random.default_rng(0)
+
+
+def banner(s):
+    print(f"\n=== {s} ===")
+
+
+def main():
+    banner("SCALE (paper Fig. 6)")
+    b = jnp.asarray(rng.standard_normal(1 << 18), jnp.float32)
+    want = scale_ref(b, 3.0)
+    for eng in ("vpu", "mxu", "auto"):
+        got = scale(b, 3.0, engine=eng)
+        print(f"  engine={eng:4s} max_err={float(jnp.max(jnp.abs(got - want))):.2e}")
+    t = scale_traits(b.size, 4)
+    print(f"  advisor: {DEFAULT_ADVISOR.advise(t)}")
+
+    banner("SpMV on block-ELL (paper Fig. 7)")
+    a = rng.standard_normal((256, 1024)).astype(np.float32)
+    a *= rng.random((256, 1024)) < 0.05
+    bell = dense_to_bell(a, bm=8, bn=128)
+    x = jnp.asarray(rng.standard_normal(1024), jnp.float32)
+    want = a @ np.asarray(x)
+    for eng in ("vpu", "mxu"):
+        got = np.asarray(spmv(bell, x, engine=eng))
+        print(f"  engine={eng:4s} max_err={np.max(np.abs(got - want)):.2e}")
+    nbr, mb, bm, bn = bell.blocks.shape
+    tr = spmv_bell(256, 1024, nbr * mb, bm, bn, 4)
+    print(f"  MXU matvec uses 1/{bn} of the systolic array; "
+          f"ceiling anyway = {best_case_speedup(TPU_V5E, tr.intensity):.4f}x")
+
+    banner("Stencil suite (paper Fig. 8, Table-3 depths)")
+    for name, spec in suite().items():
+        t_depth = TABLE3_DEPTH[name]
+        shape = (128, 128) if spec.ndim == 2 else (24, 24, 24)
+        u = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+        want = stencil_ref(u, spec, steps=t_depth)
+        errs = []
+        for eng in ("vpu", "mxu"):
+            got = stencil(u, spec, steps=t_depth, engine=eng, block_rows=8)
+            errs.append(float(jnp.max(jnp.abs(got - want))))
+        tr = stencil_traits(spec.num_points, t=t_depth, dsize=4)
+        adv = DEFAULT_ADVISOR.advise(tr)
+        print(f"  {name:7s} t={t_depth}  err_vpu={errs[0]:.1e} "
+              f"err_mxu={errs[1]:.1e}  I_t={tr.intensity:.2f} -> {adv.engine}")
+
+    print("\nConclusion (matches the paper): every memory-bound kernel "
+          "routes to the vector engine; the matrix-engine ceiling is ~1.0x.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Render §Perf from runs/hillclimb.json + baselines in runs/dryrun.json."""
+import json
+
+base = {(r['arch'], r['cell']): r for r in json.load(open("runs/dryrun.json"))
+        if r.get('mesh') == '16x16' and 't_compute_s' in r}
+hc = [r for r in json.load(open("runs/hillclimb.json")) if 't_compute_s' in r]
+
+cells = [("qwen2-vl-72b", "train_4k"), ("deepseek-v2-lite-16b", "train_4k"),
+         ("qwen1.5-32b", "decode_32k")]
+for arch, cell in cells:
+    b = base[(arch, cell)]
+    print(f"\n#### {arch} / {cell}\n")
+    print("| config | t_comp | t_mem | t_coll | bound | dominant | MFU@bound | GiB/dev |")
+    print("|---|---|---|---|---|---|---|---|")
+    def row(tag, r):
+        print(f"| {tag} | {r['t_compute_s']:.3f}s | {r['t_memory_s']:.3f}s "
+              f"| {r['t_collective_s']:.3f}s | **{r['t_bound_s']:.3f}s** "
+              f"| {r['dominant']} | {r['mfu_bound']*100:.1f}% "
+              f"| {r['bytes_per_device']['total_gb']:.1f} |")
+    row("baseline (paper-faithful Megatron-TP)", b)
+    for r in hc:
+        if (r['arch'], r['cell']) == (arch, cell):
+            row(r['tag'], r)

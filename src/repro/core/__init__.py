@@ -1,0 +1,26 @@
+"""Core library: the paper's analysis framework as composable JAX tooling.
+
+Layers:
+  hw         -- engine-aware platform specs (A100 / GH200 / TPU v5e)
+  balance    -- machine balance, boundedness (Eq. 1, 4)
+  roofline   -- two-ceiling roofline (Eq. 3, Fig. 2)
+  intensity  -- per-workload W/Q/I formulas (paper §3)
+  bounds     -- matrix-engine speedup bounds (Eq. 17-24)
+  advisor    -- engine dispatch policy (paper §6 as code)
+  analysis   -- compiled-HLO roofline terms (dry-run deliverable g)
+"""
+from .advisor import DEFAULT_ADVISOR, Advice, EngineAdvisor
+from .analysis import CollectiveStats, RooflineReport, analyze, collective_stats
+from .balance import is_memory_bound, machine_balance, time_compute, time_memory
+from .bounds import (best_case_speedup, break_even_alpha,
+                     speedup_bound_intensity, speedup_overlapped,
+                     speedup_unoverlapped, tensor_core_upper_bound,
+                     workload_upper_bound)
+from .hw import A100_80G, GH200, PLATFORMS, TPU_V5E, HardwareSpec, get_platform
+from .intensity import (KernelTraits, gemv, paper_table, scale, spmv_bell,
+                        spmv_csr, stencil, stencil_matmul,
+                        temporal_depth_to_compute_bound)
+from .roofline import (RooflinePoint, attainable, operational_intensity,
+                       place, roofline_table)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,181 @@
+"""Roofline analysis of compiled XLA artifacts (deliverable g).
+
+Derives the three roofline terms for a (program x mesh) pair from the
+dry-run's compiled executable:
+
+    compute term    = HLO_FLOPs        / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes        / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+``cost_analysis()`` supplies FLOPs and bytes.  Collective bytes are parsed
+from the (post-SPMD) HLO text by summing the result-shape sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Conventions (documented because XLA reports per-*device* modules after SPMD
+partitioning):
+  * cost_analysis numbers are per-device; we multiply by ``chips`` to get the
+    global figures the roofline formulas above divide back down.  A
+    calibration check lives in tests/test_analysis.py.
+  * all-reduce result bytes are counted twice (ring = reduce-scatter +
+    all-gather); everything else once.  This is the n->inf ring limit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from .hw import HardwareSpec, TPU_V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "e4m3": 1, "e5m2": 1,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# result types appear between '=' and the op name:  f32[8,128]{1,0} all-gather(
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\(?[a-z0-9\[\],{}/ _.-]*?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape bytes of every collective in an HLO module."""
+    by_bytes: Dict[str, int] = {k: 0 for k in COLLECTIVE_KINDS}
+    by_count: Dict[str, int] = {k: 0 for k in COLLECTIVE_KINDS}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        # async pairs appear as -start/-done; count the -start only.
+        if "-done(" in line:
+            continue
+        b = _shape_bytes(type_str)
+        weight = 2 if kind == "all-reduce" else 1
+        by_bytes[kind] += b * weight
+        by_count[kind] += 1
+    del seen_done
+    return CollectiveStats(by_bytes, by_count)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    label: str
+    chips: int
+    hlo_flops_global: float
+    hlo_bytes_global: float
+    collective_bytes_global: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops: Optional[float] = None
+    bytes_per_device: Optional[float] = None
+    collectives: Optional[CollectiveStats] = None
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Roofline step time assuming full overlap of the three streams."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flop_ratio(self) -> Optional[float]:
+        """MODEL_FLOPS / HLO_FLOPs: how much compiled compute is useful."""
+        if self.model_flops is None or self.hlo_flops_global == 0:
+            return None
+        return self.model_flops / self.hlo_flops_global
+
+    @property
+    def mfu_bound(self) -> Optional[float]:
+        """Model-flops utilization at the roofline bound time."""
+        if self.model_flops is None or self.t_bound == 0:
+            return None
+        peak = self.chips * TPU_V5E.matrix.peak_flops
+        return self.model_flops / (self.t_bound * peak)
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "label": self.label,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops_global,
+            "hlo_bytes": self.hlo_bytes_global,
+            "coll_bytes": self.collective_bytes_global,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_flop_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def analyze(label: str, cost: Dict[str, float], hlo_text: str, chips: int,
+            hw: HardwareSpec = TPU_V5E, model_flops: Optional[float] = None,
+            bytes_per_device: Optional[float] = None,
+            per_device_cost: bool = True) -> RooflineReport:
+    """Build a RooflineReport from compiled cost analysis + HLO text.
+
+    cost: the dict from ``compiled.cost_analysis()``.
+    per_device_cost: XLA reports the partitioned (per-device) module.
+    """
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    mult = chips if per_device_cost else 1
+    stats = collective_stats(hlo_text)
+    coll_global = stats.total_bytes * chips  # per-device shapes
+    peak = hw.matrix.peak_flops
+    return RooflineReport(
+        label=label,
+        chips=chips,
+        hlo_flops_global=flops * mult,
+        hlo_bytes_global=byts * mult,
+        collective_bytes_global=float(coll_global),
+        t_compute=flops * mult / (chips * peak),
+        t_memory=byts * mult / (chips * hw.mem_bw),
+        t_collective=coll_global / (chips * (hw.link_bw or 1.0)),
+        model_flops=model_flops,
+        bytes_per_device=bytes_per_device,
+        collectives=stats,
+    )

@@ -1,0 +1,151 @@
+"""Analytical FLOP/byte accounting by walking the lowered jaxpr.
+
+Why: XLA's ``compiled.cost_analysis()`` counts a while/scan body ONCE,
+ignoring the trip count (verified in tests/test_analysis.py), so any
+scan-over-layers model is undercounted by ~n_layers.  The jaxpr retains
+``scan`` with an explicit ``length``, letting us count exactly:
+
+  * dot_general: 2 * batch * M * N * K  (the MXU term)
+  * scan:        length * cost(body)
+  * remat/pjit/custom_*: recurse (remat recompute is counted when the
+    transposed jaxpr re-runs the body -- matching real execution)
+  * elementwise/reduce: one flop per output element (VPU term)
+
+Bytes are a *fusion-aware estimate*: only memory-shaped ops count
+(dot operands/outputs, gathers/scatters, cache updates, scan carries);
+pointwise chains are assumed fused into their producers, which mirrors
+the TPU compiler.  Program inputs/outputs (params, optimizer state,
+caches) are counted once at the top level.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax import core as jcore
+
+ELEMENTWISE_1 = {
+    "add", "sub", "mul", "div", "max", "min", "neg", "abs", "floor",
+    "ceil", "round", "sign", "and", "or", "xor", "not", "select_n",
+    "clamp", "rem", "pow", "atan2", "nextafter",
+}
+ELEMENTWISE_N = {  # transcendental: count a few flops each
+    "exp": 4, "log": 4, "log1p": 4, "expm1": 4, "tanh": 6, "logistic": 6,
+    "sin": 4, "cos": 4, "rsqrt": 2, "sqrt": 2, "erf": 6, "cbrt": 4,
+    "integer_pow": 2, "exp2": 4,
+}
+REDUCE = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+          "reduce_and", "reduce_or", "argmax", "argmin",
+          "cumsum", "cumprod", "cummax", "cummin", "cumlogsumexp"}
+MEMORY_OPS = {"gather", "scatter", "scatter-add", "scatter_add",
+              "dynamic_update_slice", "dynamic_slice", "concatenate",
+              "take", "transpose", "reshape_and_pad", "pad", "rev",
+              "sort", "iota_32x2"}
+CALL_PARAM_NAMES = ("jaxpr", "call_jaxpr", "fun_jaxpr", "body_jaxpr",
+                    "cond_jaxpr")
+
+
+def _size(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) if aval.shape else 1
+    except Exception:
+        return 0
+
+
+def _bytes(aval) -> int:
+    try:
+        return _size(aval) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    dot_flops: float = 0.0
+    bytes: float = 0.0
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.dot_flops += o.dot_flops
+        self.bytes += o.bytes
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.dot_flops * k, self.bytes * k)
+
+
+def _dot_cost(eqn) -> Cost:
+    dnums = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dnums
+    lhs_shape = eqn.invars[0].aval.shape
+    rhs_shape = eqn.invars[1].aval.shape
+    batch = int(np.prod([lhs_shape[i] for i in lb])) if lb else 1
+    k = int(np.prod([lhs_shape[i] for i in lc])) if lc else 1
+    m = int(np.prod([lhs_shape[i] for i in range(len(lhs_shape))
+                     if i not in lc and i not in lb]))
+    n = int(np.prod([rhs_shape[i] for i in range(len(rhs_shape))
+                     if i not in rc and i not in rb]))
+    flops = 2.0 * batch * m * n * k
+    byts = (_bytes(eqn.invars[0].aval) + _bytes(eqn.invars[1].aval)
+            + sum(_bytes(v.aval) for v in eqn.outvars))
+    return Cost(flops=flops, dot_flops=flops, bytes=byts)
+
+
+def _jaxpr_cost(jaxpr) -> Cost:
+    total = Cost()
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "dot_general":
+            total += _dot_cost(eqn)
+        elif name == "scan":
+            inner = _jaxpr_cost(eqn.params["jaxpr"].jaxpr)
+            total += inner.scaled(int(eqn.params["length"]))
+        elif name == "while":
+            # bounded loops in our stack all come from scan; a raw while
+            # (e.g. jnp.linalg) is counted once (documented limitation)
+            total += _jaxpr_cost(eqn.params["body_jaxpr"].jaxpr)
+        elif name == "cond":
+            branches = [_jaxpr_cost(b.jaxpr)
+                        for b in eqn.params["branches"]]
+            total += max(branches, key=lambda c: c.flops)
+        elif name in ("custom_jvp_call", "custom_vjp_call",
+                      "custom_vjp_call_jaxpr", "remat", "remat2",
+                      "checkpoint", "closed_call", "core_call", "pjit",
+                      "named_call", "custom_gradient"):
+            for pname in CALL_PARAM_NAMES:
+                if pname in eqn.params:
+                    sub = eqn.params[pname]
+                    sub = sub.jaxpr if hasattr(sub, "jaxpr") else sub
+                    total += _jaxpr_cost(sub)
+                    break
+        elif name in ELEMENTWISE_1:
+            total += Cost(flops=float(sum(_size(v.aval)
+                                          for v in eqn.outvars)))
+        elif name in ELEMENTWISE_N:
+            total += Cost(flops=float(ELEMENTWISE_N[name]) * sum(
+                _size(v.aval) for v in eqn.outvars))
+        elif name in REDUCE:
+            total += Cost(flops=float(sum(_size(v.aval)
+                                          for v in eqn.invars)))
+        elif name in MEMORY_OPS:
+            total += Cost(bytes=float(
+                sum(_bytes(v.aval) for v in eqn.invars)
+                + sum(_bytes(v.aval) for v in eqn.outvars)))
+    return total
+
+
+def program_cost(fn, *abstract_args, **abstract_kwargs) -> Dict[str, float]:
+    """Trace fn against ShapeDtypeStructs and count global FLOPs/bytes."""
+    closed = jax.make_jaxpr(fn)(*abstract_args, **abstract_kwargs)
+    c = _jaxpr_cost(closed.jaxpr)
+    io_bytes = (sum(_bytes(v.aval) for v in closed.jaxpr.invars)
+                + sum(_bytes(v.aval) for v in closed.jaxpr.outvars))
+    return {
+        "flops": c.flops,
+        "dot_flops": c.dot_flops,
+        "bytes": c.bytes + io_bytes,
+        "io_bytes": float(io_bytes),
+    }

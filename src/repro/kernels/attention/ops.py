@@ -1,0 +1,28 @@
+"""Public decode-attention op with the advisor's memory-bound analysis."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core import DEFAULT_ADVISOR
+from ...core.intensity import KernelTraits
+from .flash_decode import flash_decode
+
+__all__ = ["decode_attention"]
+
+
+def decode_attention(q, k, v, kv_len, *, block_s: int = 512,
+                     interpret: bool = True):
+    """Single-token GQA attention against a KV cache.
+
+    Intensity ~= (4 flops per cache element) / (2 bytes per element) --
+    memory-bound by ~100x on v5e; the advisor (and the paper) say the only
+    lever is streaming the cache once, which this kernel does.
+    """
+    b, kh, g, dh = q.shape
+    s = k.shape[1]
+    work = 4.0 * b * kh * g * s * dh
+    traffic = 2.0 * b * s * kh * dh * k.dtype.itemsize
+    traits = KernelTraits("flash_decode", work, traffic)
+    DEFAULT_ADVISOR.advise(traits)  # memory-bound; recorded by callers
+    return flash_decode(q, k, v, kv_len, block_s=block_s,
+                        interpret=interpret)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for single-token (decode) GQA attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         kv_len: int) -> jnp.ndarray:
+    """q: (B, KH, G, Dh); k,v: (B, S, KH, Dh); attend to the first kv_len.
+
+    Returns (B, KH, G, Dh)."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    s = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.arange(k.shape[1]) < kv_len
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgs,bshd->bhgd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

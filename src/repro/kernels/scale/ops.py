@@ -1,0 +1,29 @@
+"""Public SCALE op: advisor-routed, shape-agnostic wrapper."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core import DEFAULT_ADVISOR
+from ...core.intensity import scale as scale_traits
+from .scale import BLOCK_ROWS, LANES, scale_2d
+
+
+def scale(b: jnp.ndarray, q, *, engine: str = "auto",
+          interpret: bool = True) -> jnp.ndarray:
+    """a = q * b for arbitrary-shaped b.
+
+    engine: 'auto' (paper §6 advisor -> VPU, since I=1/(2D) is far below
+    machine balance), 'vpu', or 'mxu' (paper Fig.-5 A = B(qI)).
+    """
+    traits = scale_traits(b.size, dsize=b.dtype.itemsize)
+    eng = DEFAULT_ADVISOR.choose(traits, engine)
+
+    flat = b.reshape(-1)
+    n = flat.shape[0]
+    tile = BLOCK_ROWS * LANES
+    pad = (-n) % tile
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    out = scale_2d(flat.reshape(-1, LANES), q, engine=eng,
+                   interpret=interpret)
+    return out.reshape(-1)[:n].reshape(b.shape)

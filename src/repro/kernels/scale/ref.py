@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for STREAM SCALE (paper §3.1): a = q * b."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def scale_ref(b: jnp.ndarray, q) -> jnp.ndarray:
+    """a_i = q * b_i."""
+    return (jnp.asarray(q, b.dtype) * b).astype(b.dtype)

@@ -1,0 +1,27 @@
+"""Public SpMV op: advisor-routed block-ELL matvec."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core import DEFAULT_ADVISOR
+from ...core.intensity import spmv_bell as bell_traits
+from .ref import BlockEll, dense_to_bell
+from .spmv import bell_spmv_bell
+
+__all__ = ["spmv", "BlockEll", "dense_to_bell"]
+
+
+def spmv(bell: BlockEll, x: jnp.ndarray, *, engine: str = "auto",
+         interpret: bool = True) -> jnp.ndarray:
+    """y = A x, A in block-ELL.
+
+    'auto' consults the paper's advisor with the format's true traits;
+    block-ELL SpMV intensity is ~1/(2D) per stored block element, far
+    below machine balance, so auto -> vector engine.
+    """
+    nbr, mb, bm, bn = bell.blocks.shape
+    m, n = bell.shape
+    traits = bell_traits(m, n, nbr * mb, bm, bn,
+                         dsize=bell.blocks.dtype.itemsize)
+    eng = DEFAULT_ADVISOR.choose(traits, engine)
+    return bell_spmv_bell(bell, x, engine=eng, interpret=interpret)

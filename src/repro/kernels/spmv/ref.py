@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for SpMV (paper §3.2) + the block-ELL format.
+
+The CSR oracle mirrors the cuSPARSE baseline; ``bell_matvec_ref``
+densifies a block-ELL matrix and multiplies -- the ground truth both
+Pallas engines must match.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def csr_spmv_ref(indptr: jnp.ndarray, indices: jnp.ndarray,
+                 data: jnp.ndarray, x: jnp.ndarray, m: int) -> jnp.ndarray:
+    """y = A x with A in CSR, via segment-sum (the vector-engine shape)."""
+    row_of = jnp.searchsorted(indptr, jnp.arange(data.shape[0]),
+                              side="right") - 1
+    prod = data * x[indices]
+    return jax.ops.segment_sum(prod, row_of, num_segments=m)
+
+
+@dataclasses.dataclass
+class BlockEll:
+    """Block-ELL: each block-row stores a fixed number of dense blocks.
+
+    blocks: (n_block_rows, max_blocks, bm, bn) values (zero-padded)
+    cols:   (n_block_rows, max_blocks) int32 block-column ids (0-padded)
+    shape:  dense (m, n)
+    """
+    blocks: jnp.ndarray
+    cols: jnp.ndarray
+    shape: tuple
+
+    @property
+    def bm(self) -> int:
+        return self.blocks.shape[2]
+
+    @property
+    def bn(self) -> int:
+        return self.blocks.shape[3]
+
+    def todense(self) -> jnp.ndarray:
+        m, n = self.shape
+        nbr, mb, bm, bn = self.blocks.shape
+        dense = jnp.zeros((m, n), self.blocks.dtype)
+        for i in range(nbr):
+            for j in range(mb):
+                c = int(self.cols[i, j])
+                dense = dense.at[i * bm:(i + 1) * bm,
+                                 c * bn:(c + 1) * bn].add(self.blocks[i, j])
+        return dense
+
+
+def dense_to_bell(a: np.ndarray, bm: int = 8, bn: int = 128) -> BlockEll:
+    """Convert a dense matrix into block-ELL (test/bench utility).
+
+    Blocks that are entirely zero are dropped; every block-row is padded
+    to the max block count with explicit zero blocks at column 0 (safe:
+    zero values contribute nothing).
+    """
+    m, n = a.shape
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    nbr, nbc = m // bm, n // bn
+    rows_blocks, rows_cols = [], []
+    for i in range(nbr):
+        blocks, cols = [], []
+        for j in range(nbc):
+            blk = a[i * bm:(i + 1) * bm, j * bn:(j + 1) * bn]
+            if np.any(blk != 0):
+                blocks.append(blk)
+                cols.append(j)
+        rows_blocks.append(blocks)
+        rows_cols.append(cols)
+    max_blocks = max(1, max(len(b) for b in rows_blocks))
+    out_blocks = np.zeros((nbr, max_blocks, bm, bn), a.dtype)
+    out_cols = np.zeros((nbr, max_blocks), np.int32)
+    for i, (blocks, cols) in enumerate(zip(rows_blocks, rows_cols)):
+        for k, (blk, c) in enumerate(zip(blocks, cols)):
+            out_blocks[i, k] = blk
+            out_cols[i, k] = c
+    return BlockEll(jnp.asarray(out_blocks), jnp.asarray(out_cols), (m, n))
+
+
+def bell_matvec_ref(bell: BlockEll, x: jnp.ndarray) -> jnp.ndarray:
+    """Oracle: densify then multiply."""
+    return bell.todense() @ x

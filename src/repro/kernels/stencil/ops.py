@@ -1,0 +1,27 @@
+"""Public stencil op: advisor-routed, temporal-blocking aware."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core import DEFAULT_ADVISOR
+from ...core.intensity import stencil as stencil_traits
+from .defs import TABLE3_DEPTH, StencilSpec, suite
+from .stencil import stencil_apply
+
+__all__ = ["stencil", "suite", "TABLE3_DEPTH", "StencilSpec"]
+
+
+def stencil(u: jnp.ndarray, spec: StencilSpec, *, steps: int = 1,
+            engine: str = "auto", block_rows: int = 128,
+            interpret: bool = True) -> jnp.ndarray:
+    """Apply `spec` for `steps` fused timesteps.
+
+    'auto' consults the advisor with the *temporally blocked* intensity
+    I_t = t * |S| / D (paper Eq. 13): shallow blocking stays memory-bound
+    (vector engine), deep blocking can cross the knee.
+    """
+    traits = stencil_traits(spec.num_points, t=steps,
+                            dsize=u.dtype.itemsize)
+    eng = DEFAULT_ADVISOR.choose(traits, engine)
+    return stencil_apply(u, spec, steps=steps, engine=eng,
+                         block_rows=block_rows, interpret=interpret)

@@ -1,0 +1,48 @@
+"""Pure-jnp stencil oracle: zero boundary, t fused timesteps."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .defs import StencilSpec
+
+
+def _shift_zero(u: jnp.ndarray, off) -> jnp.ndarray:
+    """u shifted so out[p] = u[p + off], zeros outside the domain."""
+    out = u
+    for ax, d in enumerate(off):
+        if d == 0:
+            continue
+        out = jnp.roll(out, -d, axis=ax)
+        idx = [slice(None)] * out.ndim
+        if d > 0:
+            idx[ax] = slice(out.shape[ax] - d, None)
+        else:
+            idx[ax] = slice(0, -d)
+        out = out.at[tuple(idx)].set(0)
+    return out
+
+
+def stencil_ref(u: jnp.ndarray, spec: StencilSpec, steps: int = 1
+                ) -> jnp.ndarray:
+    """Apply the stencil `steps` times with zero boundary conditions."""
+    assert u.ndim == spec.ndim
+    for _ in range(steps):
+        acc = jnp.zeros_like(u)
+        for off, w in zip(spec.offsets, spec.weights):
+            acc = acc + jnp.asarray(w, u.dtype) * _shift_zero(u, off)
+        u = acc
+    return u
+
+
+def banded_matrix(w1d, size: int, dtype=np.float64) -> np.ndarray:
+    """M[c', c] = w1d[c' - c + r]: out = in @ M applies w1d along an axis."""
+    r = (len(w1d) - 1) // 2
+    m = np.zeros((size, size), dtype)
+    for d, w in enumerate(w1d):
+        off = d - r
+        for c in range(size):
+            cp = c + off
+            if 0 <= cp < size:
+                m[cp, c] = w
+    return m

@@ -1,0 +1,183 @@
+"""Pallas TPU stencil kernels, one step-function per engine (paper §5.3).
+
+TPU adaptation (DESIGN.md §2.3):
+  * VPU kernel = the EBISU/Brick role: shifted adds on a VMEM tile, with
+    in-kernel *temporal blocking* (t fused steps, trapezoid halo t*r).
+  * MXU kernel = the ConvStencil role re-thought for a 128x128 systolic
+    array: each fused step is a set of *banded-matrix multiplications*
+    (star: one 1D pass per axis + center term; separable box: product of
+    1D passes).  Full MXU utilization, but W inflates from 2|S| to
+    ~2*sum(tile dims) per point -- exactly the compute-waste the paper's
+    roofline analysis prices in.
+
+Tiling: the leading axis is blocked (prev/cur/next refs give the halo);
+trailing axes live entirely in the block, pre-padded by halo zeros.
+Zero boundary conditions are enforced exactly by re-masking the domain
+frame after every fused step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .defs import StencilSpec
+
+
+# --------------------------------------------------------------------------
+# step functions
+# --------------------------------------------------------------------------
+
+def _shift_zero_tile(tile: jnp.ndarray, off: Tuple[int, ...]) -> jnp.ndarray:
+    """out[p] = tile[p + off], zero-filled at tile edges (static shapes)."""
+    out = tile
+    for ax, d in enumerate(off):
+        if d == 0:
+            continue
+        pad = [(0, 0)] * out.ndim
+        if d > 0:
+            pad[ax] = (0, d)
+            out = jnp.pad(out, pad)
+            out = jax.lax.slice_in_dim(out, d, d + tile.shape[ax], axis=ax)
+        else:
+            pad[ax] = (-d, 0)
+            out = jnp.pad(out, pad)
+            out = jax.lax.slice_in_dim(out, 0, tile.shape[ax], axis=ax)
+    return out
+
+
+def _vpu_step(tile: jnp.ndarray, spec: StencilSpec) -> jnp.ndarray:
+    acc = jnp.zeros_like(tile)
+    for off, w in zip(spec.offsets, spec.weights):
+        acc = acc + jnp.asarray(w, tile.dtype) * _shift_zero_tile(tile, off)
+    return acc
+
+
+def _banded(w1d: Tuple[float, ...], size: int, dtype) -> jnp.ndarray:
+    """M[c', c] = w1d[c'-c+r]; `in @ M` applies w1d along the last axis."""
+    r = (len(w1d) - 1) // 2
+    rows = jax.lax.broadcasted_iota(jnp.int32, (size, size), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (size, size), 1)
+    m = jnp.zeros((size, size), dtype)
+    for d, w in enumerate(w1d):
+        if w == 0.0:
+            continue
+        m = m + jnp.where(rows - cols == d - r,
+                          jnp.asarray(w, dtype), jnp.asarray(0, dtype))
+    return m
+
+
+def _axis_pass(tile: jnp.ndarray, w1d, axis: int) -> jnp.ndarray:
+    """Banded matmul applying w1d along `axis` (drives the MXU)."""
+    size = tile.shape[axis]
+    m = _banded(w1d, size, tile.dtype)
+    moved = jnp.moveaxis(tile, axis, -1)
+    flat = moved.reshape(-1, size)
+    out = jax.lax.dot(flat, m, preferred_element_type=jnp.float32)
+    out = out.astype(tile.dtype).reshape(moved.shape)
+    return jnp.moveaxis(out, -1, axis)
+
+
+def _mxu_step(tile: jnp.ndarray, spec: StencilSpec) -> jnp.ndarray:
+    if spec.kind == "star":
+        acc = jnp.asarray(spec.center, tile.dtype) * tile
+        for ax in range(spec.ndim):
+            acc = acc + _axis_pass(tile, spec.axis_weights[ax], ax)
+        return acc
+    # separable box: product of per-axis passes
+    out = tile
+    for ax in range(spec.ndim):
+        out = _axis_pass(out, spec.axis_weights[ax], ax)
+    return out
+
+
+# --------------------------------------------------------------------------
+# kernel body + wrapper
+# --------------------------------------------------------------------------
+
+def _domain_mask(tile_shape, row0: jnp.ndarray, halo: int,
+                 true_shape: Tuple[int, ...], dtype) -> jnp.ndarray:
+    """1 inside the true domain, 0 on the zero-BC frame.
+
+    Leading axis positions are global (row0 + local); trailing axes are
+    padded by `halo` on the left and to their block size on the right.
+    """
+    mask = jnp.ones(tile_shape, dtype)
+    lead = jax.lax.broadcasted_iota(jnp.int32, tile_shape, 0) + row0
+    mask = mask * ((lead >= 0) & (lead < true_shape[0])).astype(dtype)
+    for ax in range(1, len(tile_shape)):
+        pos = jax.lax.broadcasted_iota(jnp.int32, tile_shape, ax) - halo
+        mask = mask * ((pos >= 0) & (pos < true_shape[ax])).astype(dtype)
+    return mask
+
+
+def _stencil_kernel(prev_ref, cur_ref, next_ref, o_ref, *, spec: StencilSpec,
+                    engine: str, steps: int, block_rows: int, halo: int,
+                    true_shape: Tuple[int, ...]):
+    tile = jnp.concatenate(
+        [prev_ref[...][-halo:], cur_ref[...], next_ref[...][:halo]], axis=0)
+    i = pl.program_id(0)
+    row0 = i * block_rows - halo  # global index of tile row 0
+    step = _vpu_step if engine == "vector" else _mxu_step
+    mask = _domain_mask(tile.shape, row0, halo, true_shape, tile.dtype)
+    for _ in range(steps):
+        tile = step(tile, spec) * mask
+    o_ref[...] = tile[halo:halo + block_rows]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(
+    jax.jit, static_argnames=("spec", "steps", "engine", "block_rows",
+                              "interpret"))
+def stencil_apply(u: jnp.ndarray, spec: StencilSpec, *, steps: int = 1,
+                  engine: str = "vector", block_rows: int = 128,
+                  interpret: bool = True) -> jnp.ndarray:
+    """Apply `spec` to u for `steps` fused timesteps on the chosen engine."""
+    assert u.ndim == spec.ndim
+    true_shape = u.shape
+    halo = steps * spec.radius
+    assert halo <= block_rows, "halo must fit one leading block"
+
+    # pad trailing axes: halo zeros left, halo + lane alignment right
+    lane_mult = 128 if u.ndim >= 2 else 1
+    pads = [(0, 0)]
+    for ax in range(1, u.ndim):
+        right = _round_up(u.shape[ax] + 2 * halo, lane_mult) - u.shape[ax] - halo
+        pads.append((halo, right))
+    # pad leading axis: one zero block each side + round up to block size
+    lead_round = _round_up(u.shape[0], block_rows) - u.shape[0]
+    pads[0] = (block_rows, lead_round + block_rows)
+    up = jnp.pad(u, pads)
+
+    n_tiles = (up.shape[0] - 2 * block_rows) // block_rows
+    trailing = up.shape[1:]
+    blk = (block_rows, *trailing)
+    zeros = (0,) * len(trailing)
+
+    kernel = functools.partial(
+        _stencil_kernel, spec=spec, engine=engine, steps=steps,
+        block_rows=block_rows, halo=halo, true_shape=true_shape)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec(blk, lambda i: (i, *zeros)),
+            pl.BlockSpec(blk, lambda i: (i + 1, *zeros)),
+            pl.BlockSpec(blk, lambda i: (i + 2, *zeros)),
+        ],
+        out_specs=pl.BlockSpec(blk, lambda i: (i, *zeros)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles * block_rows, *trailing),
+                                       u.dtype),
+        interpret=interpret,
+    )(up, up, up)
+
+    sl = [slice(0, true_shape[0])]
+    for ax in range(1, u.ndim):
+        sl.append(slice(halo, halo + true_shape[ax]))
+    return out[tuple(sl)]

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module touches no jax device state.  The single-pod mesh is
+16x16 = 256 chips (one v5e pod); multi-pod adds a leading "pod" axis for
+2 pods = 512 chips.  The "pod" and "data" axes are both data-parallel
+(gradients reduce over both); "model" carries TP/EP.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for subprocess multi-device tests (8 host devices)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

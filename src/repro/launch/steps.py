@@ -1,0 +1,159 @@
+"""Step functions + abstract input specs for every (arch x cell) pair.
+
+``input_specs`` returns weak-type-correct ShapeDtypeStruct stand-ins for
+every model input (no device allocation), mirroring the data pipeline's
+real batches.  ``make_*_step`` return the pure functions that
+launch/train.py executes and launch/dryrun.py lowers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import lm
+from ..models.config import ModelConfig
+from ..optim.adamw import AdamW, AdamWState
+from .cells import Cell
+
+Pytree = Any
+
+
+# --------------------------------------------------------------------------
+# abstract inputs
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, cell: Cell) -> Dict[str, Any]:
+    """ShapeDtypeStructs for a train/prefill batch of this cell."""
+    b, s = cell.global_batch, cell.seq
+    f32, i32 = jnp.float32, jnp.int32
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), i32),
+        "labels": jax.ShapeDtypeStruct((b, s), i32),
+        "loss_mask": jax.ShapeDtypeStruct((b, s), f32),
+    }
+    if cfg.frontend == "vision":
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_len, cfg.frontend_dim), f32)
+    if cfg.enc_dec:
+        specs["enc_frames"] = jax.ShapeDtypeStruct((b, s, cfg.frontend_dim),
+                                                   f32)
+    if cell.kind == "prefill":
+        specs.pop("labels")
+        specs.pop("loss_mask")
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, cell: Cell, cache_dtype=jnp.bfloat16
+                       ) -> Tuple[Any, Pytree, Any]:
+    """(tokens, caches, index) ShapeDtypeStructs for a decode step."""
+    b, s = cell.global_batch, cell.seq
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    caches = jax.eval_shape(
+        lambda: lm.init_caches(cfg, b, max_len=s, dtype=cache_dtype,
+                               enc_len=s if cfg.enc_dec else None))
+    index = jax.ShapeDtypeStruct((), jnp.int32)
+    return tokens, caches, index
+
+
+def abstract_state(cfg: ModelConfig, opt: Optional[AdamW] = None
+                   ) -> Tuple[Pytree, Optional[Pytree]]:
+    params = lm.abstract_params(cfg)
+    if opt is None:
+        return params, None
+    opt_state = jax.eval_shape(
+        lambda p: (opt or AdamW()).init(p), params)
+    return params, opt_state
+
+
+# --------------------------------------------------------------------------
+# steps
+# --------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt: AdamW, *, dtype=jnp.bfloat16,
+                    remat_policy: Optional[str] = None,
+                    grad_compress: Optional[str] = None,
+                    unroll: bool = False, act_spec=None,
+                    loss_chunks: int = 0, cast_params: bool = False,
+                    remat: bool = True):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    cast_params: cast the f32 master weights to the compute dtype *before*
+    the layer scan, so ZeRO-3 weight all-gathers move bf16 (half the
+    bytes); grads flow back through the cast to f32 masters."""
+    from ..optim.compression import compress_decompress
+
+    def loss_of(p, batch):
+        if cast_params:
+            p = jax.tree.map(
+                lambda w: w.astype(dtype)
+                if w.dtype == jnp.float32 else w, p)
+        return lm.loss_fn(p, cfg, batch, dtype=dtype,
+                          remat_policy=remat_policy, unroll=unroll,
+                          act_spec=act_spec, loss_chunks=loss_chunks,
+                          remat=remat)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_of, has_aux=True)(params, batch)
+        if grad_compress:
+            grads = compress_decompress(grads, grad_compress)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, dtype=jnp.bfloat16,
+                      unroll: bool = False):
+    def prefill_step(params, batch):
+        return lm.prefill(params, cfg, batch, dtype=dtype, unroll=unroll)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, dtype=jnp.bfloat16,
+                     unroll: bool = False):
+    def serve_step(params, tokens, caches, index):
+        return lm.decode_step(params, cfg, tokens, caches, index,
+                              dtype=dtype, unroll=unroll)
+    return serve_step
+
+
+# --------------------------------------------------------------------------
+# MODEL_FLOPS accounting (roofline §g)
+# --------------------------------------------------------------------------
+
+def model_flops(cfg: ModelConfig, cell: Cell) -> float:
+    """6*N*D for training; 2*N*D for inference steps (forward only).
+
+    MoE uses active params.  Decode counts one token per sequence plus the
+    attention read over the cache (2 * B * L * S * kv_dim * 2 per step).
+    """
+    n = (cfg.active_param_count() if cfg.n_experts
+         else cfg.param_count())
+    b, s = cell.global_batch, cell.seq
+    if cell.kind == "train":
+        return 6.0 * n * b * s
+    if cell.kind == "prefill":
+        flops = 2.0 * n * b * s
+        # quadratic attention term (hybrid: only the shared-block applications)
+        if cfg.family == "hybrid":
+            layers = cfg.n_layers // cfg.attn_every
+        elif cfg.family == "ssm":
+            layers = 0
+        else:
+            layers = cfg.n_layers + (cfg.n_enc_layers if cfg.enc_dec else 0)
+        flops += (2.0 * 2.0 * b * layers * s * s * cfg.n_heads
+                  * (cfg.head_dim or 0))
+        return flops
+    # decode: one token
+    flops = 2.0 * n * b
+    if cfg.family == "hybrid":
+        n_apps = cfg.n_layers // cfg.attn_every
+        flops += 4.0 * b * n_apps * s * cfg.n_heads * cfg.head_dim
+    elif cfg.family != "ssm":
+        flops += 4.0 * b * cfg.n_layers * s * cfg.n_kv_heads * cfg.head_dim \
+            * (cfg.n_heads // cfg.n_kv_heads)
+    return flops

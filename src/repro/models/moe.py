@@ -1,0 +1,105 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-based einsum dispatch.
+
+The dispatch/combine tensors follow the GShard/Switch formulation, which
+maps onto TPUs as two einsums around the expert GEMMs -- the expert
+dimension shards over the `model` mesh axis (expert parallelism).  Router
+z-loss and load-balancing aux loss are returned for the training loop.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Params, dense_init
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 5)
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    p = {
+        "router": dense_init(ks[0], d, e, scale=0.02),
+        "w_gate": jax.random.normal(ks[1], (e, d, f), jnp.float32) / d**0.5,
+        "w_up": jax.random.normal(ks[2], (e, d, f), jnp.float32) / d**0.5,
+        "w_down": jax.random.normal(ks[3], (e, f, d), jnp.float32) / f**0.5,
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * cfg.moe_d_ff
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {"w_gate": dense_init(kk[0], d, fs),
+                       "w_up": dense_init(kk[1], d, fs),
+                       "w_down": dense_init(kk[2], fs, d)}
+    return p
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    cap = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(cap, 4)
+
+
+def moe_ffn(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+            group_size: int = 2048
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B,S,D) -> (B,S,D), aux metrics {aux_loss, z_loss}.
+
+    GShard-style *grouped* dispatch: tokens are routed within groups of
+    ``group_size`` so the (G, Sg, E, C) dispatch tensors stay tile-sized
+    regardless of the global batch (capacity is per-group).  Groups align
+    with the batch/data sharding, so dispatch einsums stay local and only
+    the expert GEMMs touch the EP axis.
+    """
+    dtype = x.dtype
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    sg = min(group_size, t)
+    while t % sg:                         # fall back to a divisor
+        sg //= 2
+    g = t // sg
+    cap = _capacity(sg, cfg)
+    xt = x.reshape(g, sg, d)
+
+    logits = (xt @ p["router"].astype(dtype)).astype(jnp.float32)  # (G,Sg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)                        # (G,Sg,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) in its expert's per-group buffer
+    onehot_i = jax.nn.one_hot(idx, e, dtype=jnp.int32)              # (G,Sg,k,E)
+    slot_flat = onehot_i.reshape(g, sg * k, e)
+    pos_flat = jnp.cumsum(slot_flat, axis=1) - 1                    # (G,Sg*k,E)
+    pos = (pos_flat * slot_flat).sum(-1).reshape(g, sg, k)
+    keep = pos < cap
+    gate_vals = gate_vals * keep.astype(jnp.float32)
+
+    # combine: (G,Sg,E,C) via one-hot algebra (out-of-capacity clipped out)
+    exp_oh = jax.nn.one_hot(idx, e, dtype=jnp.float32)              # (G,Sg,k,E)
+    cap_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap,
+                            dtype=jnp.float32)                      # (G,Sg,k,C)
+    combine = jnp.einsum("gske,gskc,gsk->gsec", exp_oh, cap_oh, gate_vals)
+    dispatch = (combine > 0).astype(dtype)
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xt)                 # (G,E,C,D)
+    gt = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(dtype))
+    u = jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(dtype))
+    h = jax.nn.silu(gt) * u
+    y = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dtype))
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(dtype), y)
+    xt = xt.reshape(t, d)
+    out = out.reshape(t, d)
+
+    if "shared" in p:
+        sp = p["shared"]
+        sg = xt @ sp["w_gate"].astype(dtype)
+        su = xt @ sp["w_up"].astype(dtype)
+        out = out + (jax.nn.silu(sg) * su) @ sp["w_down"].astype(dtype)
+
+    # aux losses (Switch-style load balance + router z-loss)
+    me = probs.mean(axis=(0, 1))                                     # (E,)
+    ce = exp_oh.sum(axis=2).mean(axis=(0, 1))                        # (E,)
+    aux = (me * ce).sum() * e * cfg.router_aux_weight
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * 1e-3
+    return out.reshape(b, s, d), {"aux_loss": aux, "z_loss": z}

@@ -1,0 +1,197 @@
+"""Mamba2 (SSD, state-space duality) layer: chunked train, recurrent decode.
+
+The chunked SSD algorithm (Dao & Gu 2024, §6) splits the sequence into
+chunks; intra-chunk terms are dense matmuls (MXU food) and inter-chunk
+terms are a short scan over per-chunk states.  This is the paper's
+Eq.-13 'temporal blocking escape hatch' realized in an LM: chunking
+*raises* operational intensity, which is why the matrix engine is the
+right tool here and not for SCALE/SpMV (DESIGN.md §5).
+
+Decode keeps the recurrent state (B, H, P, N) plus a small causal-conv
+tail; one token costs O(d_inner * N) -- firmly memory-bound.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Params, dense_init, rmsnorm
+
+
+def init_ssm(key, cfg: ModelConfig) -> Params:
+    """Projections kept separate (z/x/BC/dt) so tensor parallelism can
+    shard the d_inner/head dims without slicing a packed axis."""
+    ks = jax.random.split(key, 6)
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h, g = cfg.ssm_nheads, cfg.ssm_ngroups
+    return {
+        "w_z": dense_init(ks[0], d, di),
+        "w_x": dense_init(ks[1], d, di),
+        "w_bc": dense_init(ks[4], d, 2 * g * n),
+        "w_dt": dense_init(ks[5], d, h),
+        "conv_x": jax.random.normal(ks[1], (cfg.ssm_conv, di),
+                                    jnp.float32) * 0.1,
+        "conv_x_b": jnp.zeros((di,), jnp.float32),
+        "conv_bc": jax.random.normal(ks[1], (cfg.ssm_conv, 2 * g * n),
+                                     jnp.float32) * 0.1,
+        "conv_bc_b": jnp.zeros((2 * g * n,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (h,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[3], di, d),
+    }
+
+
+def _split_proj(p: Params, u: jnp.ndarray, cfg: ModelConfig):
+    dtype = u.dtype
+    z = u @ p["w_z"].astype(dtype)
+    x = u @ p["w_x"].astype(dtype)
+    bc = u @ p["w_bc"].astype(dtype)
+    dt = u @ p["w_dt"].astype(dtype)
+    return z, x, bc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv, width K.  conv_state: (B, K-1, C) tail."""
+    k = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * conv_w[i].astype(xbc.dtype)
+              for i in range(k))
+    new_state = xp[:, -(k - 1):]
+    return jax.nn.silu(out + conv_b.astype(xbc.dtype)), new_state
+
+
+def _ssd_chunked(x, dt, a, b, c, chunk: int):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P), dt: (B,S,H), a: (H,) (positive decay rate),
+    b,c: (B,S,G,N).  Returns y: (B,S,H,P), final_state: (B,H,P,N).
+    """
+    bs, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    def r(t, extra=()):  # reshape into chunks
+        return t.reshape(bs, nc, chunk, *t.shape[2:])
+
+    xc, dtc, bc_, cc = r(x), r(dt), r(b), r(c)
+    da = dtc * a[None, None, None, :]                       # (B,nc,Q,H)
+    cum = jnp.cumsum(da, axis=2)                            # within-chunk
+    total = cum[:, :, -1]                                   # (B,nc,H)
+
+    # intra-chunk (diagonal block): L[q,t] = exp(cum[q]-cum[t]) for q>=t
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (B,nc,Q,Q,H)
+    qi = jnp.arange(chunk)
+    causal = (qi[:, None] >= qi[None, :])[None, None, :, :, None]
+    l_mat = jnp.where(causal, jnp.exp(-seg), 0.0)           # decay q<-t
+    cb = jnp.einsum("bzqgn,bztgn->bzqtg", cc, bc_)          # (B,nc,Q,Q,G)
+    cb = jnp.repeat(cb, rep, axis=-1)                       # (B,nc,Q,Q,H)
+    att = cb * l_mat * dtc[:, :, None, :, :]                # weight dt at t
+    y_diag = jnp.einsum("bzqth,bzthp->bzqhp", att, xc)
+
+    # per-chunk input states: sum_t exp(-(total - cum[t])) dt_t b_t x_t
+    decay_in = jnp.exp(cum - total[:, :, None])             # (B,nc,Q,H)
+    bx = jnp.einsum("bztgn,bzthp,bzth->bzhpn",
+                    bc_, xc, dtc * decay_in)                # uses group bcast
+    # NOTE: einsum above broadcasts g->h only when g==1; general case:
+    if g != 1:
+        bfull = jnp.repeat(bc_, rep, axis=3)
+        bx = jnp.einsum("bzthn,bzthp,bzth->bzhpn", bfull, xc, dtc * decay_in)
+
+    # inter-chunk recurrence over states
+    def step(state, inp):
+        bx_z, tot_z = inp                                    # (B,H,P,N),(B,H)
+        new = state * jnp.exp(-tot_z)[..., None, None] + bx_z
+        return new, state                                    # emit state *before* this chunk
+
+    init = jnp.zeros((bs, h, p, n), x.dtype)
+    final, prev_states = jax.lax.scan(
+        step, init, (bx.swapaxes(0, 1), total.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)                 # (B,nc,H,P,N)
+
+    # inter-chunk output: y_off[q] = c_q . (decay to q) state_prev
+    decay_out = jnp.exp(-cum)                                # (B,nc,Q,H)
+    cfull = jnp.repeat(cc, rep, axis=3) if g != 1 else cc
+    if g == 1:
+        y_off = jnp.einsum("bzqgn,bzhpn,bzqh->bzqhp",
+                           cc, prev_states, decay_out)
+    else:
+        y_off = jnp.einsum("bzqhn,bzhpn,bzqh->bzqhp",
+                           cfull, prev_states, decay_out)
+    y = (y_diag + y_off).reshape(bs, s, h, p)
+    return y, final
+
+
+def ssm_layer(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+              state: Optional[Dict] = None
+              ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Mamba2 block.  state=None -> chunked scan over the full sequence;
+    state given -> single-token recurrent update (decode)."""
+    dtype = x.dtype
+    di, n, h, g = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_ngroups
+    ph = cfg.ssm_headdim
+    bsz, s, _ = x.shape
+
+    z, xr, bcr, dt = _split_proj(p, x, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None])         # (B,S,H)
+    a = jnp.exp(p["a_log"])                                   # (H,) > 0
+
+    cx = state["conv_x"] if state is not None else None
+    cbc = state["conv_bc"] if state is not None else None
+    x_c, tail_x = _causal_conv(xr, p["conv_x"], p["conv_x_b"], cx)
+    bc_c, tail_bc = _causal_conv(bcr, p["conv_bc"], p["conv_bc_b"], cbc)
+    xin = x_c.reshape(bsz, s, h, ph)
+    bmat = bc_c[..., :g * n].reshape(bsz, s, g, n)
+    cmat = bc_c[..., g * n:].reshape(bsz, s, g, n)
+
+    if state is None:
+        y, final = _ssd_chunked(xin.astype(jnp.float32), dt, a,
+                                bmat.astype(jnp.float32),
+                                cmat.astype(jnp.float32),
+                                min(cfg.ssm_chunk, s))
+        new_state = {"ssm": final.astype(jnp.float32),
+                     "conv_x": tail_x.astype(jnp.float32),
+                     "conv_bc": tail_bc.astype(jnp.float32)}
+    else:
+        # recurrent: state' = state * exp(-dt a) + dt * b x^T ; y = c . state'
+        st = state["ssm"]                                     # (B,H,P,N)
+        dt1 = dt[:, 0]                                        # (B,H)
+        decay = jnp.exp(-dt1 * a[None])[..., None, None]      # (B,H,1,1)
+        bx = jnp.einsum("bgn,bhp,bh->bhpn",
+                        bmat[:, 0].astype(jnp.float32),
+                        xin[:, 0].astype(jnp.float32), dt1)
+        st = st * decay + bx
+        y = jnp.einsum("bgn,bhpn->bhp", cmat[:, 0].astype(jnp.float32), st)
+        y = y[:, None]                                        # (B,1,H,P)
+        new_state = {"ssm": st, "conv_x": tail_x.astype(jnp.float32),
+                     "conv_bc": tail_bc.astype(jnp.float32)}
+
+    y = y + xin.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, di).astype(dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["out_proj"].astype(dtype), new_state
+
+
+def make_ssm_state(cfg: ModelConfig, batch: int) -> Dict:
+    return {
+        "ssm": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_headdim,
+                          cfg.ssm_state), jnp.float32),
+        "conv_x": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner),
+                            jnp.float32),
+        "conv_bc": jnp.zeros((batch, cfg.ssm_conv - 1,
+                              2 * cfg.ssm_ngroups * cfg.ssm_state),
+                             jnp.float32),
+    }

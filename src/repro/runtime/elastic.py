@@ -1,0 +1,49 @@
+"""Elastic scaling: re-shard a checkpoint onto a different mesh.
+
+A checkpoint saved on an N-device mesh restores onto an M-device mesh by
+loading leaves on host and ``device_put``-ing them against the new mesh's
+shardings (runtime/checkpoint.restore does the transfer).  This module
+adds the policy layer: recompute the partition specs for the new mesh
+(divisibility-aware via sharding.rules.fit_spec) and carry the data
+pipeline's step cursor across so no batch is skipped or repeated.
+
+On a real cluster this is the node-failure recovery path: drop to the
+surviving slice, restore, continue; scale back up at the next boundary.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+
+from ..sharding import rules
+from . import checkpoint as ckpt
+
+Pytree = Any
+
+
+def reshard_restore(ckpt_dir: str, template: Pytree, new_mesh,
+                    step: Optional[int] = None) -> Tuple[Pytree, int]:
+    """Restore `template`-shaped state onto `new_mesh`.
+
+    Returns (state, step).  Works across any device-count change as long
+    as the new mesh axes divide (fit_spec drops/relocates the rest).
+    """
+    specs = rules.param_pspecs(template, new_mesh)
+    shardings = rules.to_shardings(new_mesh, specs)
+    if step is None:
+        step = ckpt.latest_step(ckpt_dir)
+    state = ckpt.restore(ckpt_dir, template, step=step, shardings=shardings)
+    return state, step
+
+
+def mesh_transition_plan(old_shape: dict, new_shape: dict) -> dict:
+    """Describe the transition (for logs/controller): axis deltas and the
+    data-parallel rescale factor (per-host batch changes inversely)."""
+    old_dp = old_shape.get("data", 1) * old_shape.get("pod", 1)
+    new_dp = new_shape.get("data", 1) * new_shape.get("pod", 1)
+    return {
+        "old": dict(old_shape), "new": dict(new_shape),
+        "dp_rescale": new_dp / old_dp,
+        "tp_change": new_shape.get("model", 1) != old_shape.get("model", 1),
+    }

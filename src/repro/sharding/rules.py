@@ -1,0 +1,215 @@
+"""Partition rules: parameter/activation/cache PartitionSpecs per arch.
+
+Mesh axes: optional "pod" (inter-pod DP), "data" (DP, also the ZeRO-1 /
+sequence-parallel axis), "model" (TP + EP).  Rules are name-based over the
+parameter tree; stacked layer dims (from scan) are transparent -- specs are
+right-aligned against each leaf's trailing dims.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+MODEL = "model"
+
+
+# base specs keyed by parameter leaf name; `ctx` distinguishes homonyms
+def _base_spec(name: str, path: Tuple[str, ...]) -> P:
+    in_moe = "moe" in path and "shared" not in path
+    table = {
+        "embed": P(MODEL, None),
+        "head": P(None, MODEL),
+        # attention
+        "wq": P(None, MODEL), "wk": P(None, MODEL), "wv": P(None, MODEL),
+        "bq": P(MODEL), "bk": P(MODEL), "bv": P(MODEL),
+        "wo": P(MODEL, None),
+        # MLA
+        "wq_a": P(None, None), "wq_b": P(None, MODEL),
+        "wkv_a": P(None, None), "wkv_b": P(None, MODEL),
+        # mlp
+        "w_gate": P(MODEL, None, None) if in_moe else P(None, MODEL),
+        "w_up": P(MODEL, None, None) if in_moe else P(None, MODEL),
+        "w_down": P(MODEL, None, None) if in_moe else P(MODEL, None),
+        "router": P(None, None),
+        # ssm
+        "w_z": P(None, MODEL), "w_x": P(None, MODEL),
+        "w_bc": P(None, None), "w_dt": P(None, MODEL),
+        "conv_x": P(None, MODEL), "conv_x_b": P(MODEL),
+        "conv_bc": P(None, None), "conv_bc_b": P(None),
+        "a_log": P(MODEL), "dt_bias": P(MODEL), "d_skip": P(MODEL),
+        "norm": P(MODEL),
+        "out_proj": P(MODEL, None),
+        # frontend
+        "proj": P(None, None), "bias": P(None),
+    }
+    return table.get(name, P())  # norms & scalars replicate
+
+
+def _right_align(spec: P, ndim: int) -> P:
+    """Pad a trailing-dims spec with leading Nones (scan-stacked dims)."""
+    pad = ndim - len(spec)
+    assert pad >= 0, (spec, ndim)
+    return P(*([None] * pad), *spec)
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def fit_spec(spec: P, shape, mesh) -> P:
+    """Drop axes whose dim isn't divisible; relocate a dropped 'model' axis
+    to the largest divisible unsharded dim (explicit in_shardings must
+    divide exactly -- GSPMD padding only applies to inferred shardings)."""
+    spec = list(spec) + [None] * (len(shape) - len(spec))
+    dropped = []
+    for i, ax in enumerate(spec):
+        if ax is not None and shape[i] % _axis_size(mesh, ax) != 0:
+            dropped.append(ax)
+            spec[i] = None
+    for ax in dropped:
+        cands = [(i, shape[i]) for i in range(len(shape))
+                 if spec[i] is None and shape[i] % _axis_size(mesh, ax) == 0
+                 and shape[i] > 1]
+        if cands:
+            i, _ = max(cands, key=lambda t: t[1])
+            spec[i] = ax
+    return P(*spec)
+
+
+def param_pspecs(params_abstract: Pytree, mesh=None) -> Pytree:
+    """PartitionSpec tree matching any params/grads/opt-moment tree."""
+    def spec_for(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        base = _base_spec(names[-1], tuple(names)) if names else P()
+        spec = _right_align(base, leaf.ndim)
+        return fit_spec(spec, leaf.shape, mesh) if mesh is not None else spec
+    return jax.tree_util.tree_map_with_path(spec_for, params_abstract)
+
+
+def zero1_pspecs(params_abstract: Pytree, mesh=None,
+                 data_axis: str = "data") -> Pytree:
+    """ZeRO-1: optimizer moments additionally sharded over the data axis
+    on the largest dim that is not already sharded."""
+    def spec_for(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        base = _base_spec(names[-1], tuple(names)) if names else P()
+        spec = list(_right_align(base, leaf.ndim))
+        if mesh is not None:
+            spec = list(fit_spec(P(*spec), leaf.shape, mesh))
+        if leaf.ndim >= 2:
+            dsize = _axis_size(mesh, data_axis) if mesh is not None else 1
+            dims = [(i, leaf.shape[i]) for i in range(leaf.ndim)
+                    if spec[i] is None and leaf.shape[i] % max(dsize, 1) == 0]
+            if dims:
+                i, _ = max(dims, key=lambda t: t[1])
+                spec[i] = data_axis
+        return P(*spec)
+    return jax.tree_util.tree_map_with_path(spec_for, params_abstract)
+
+
+def fsdp_pspecs(params_abstract: Pytree, mesh) -> Pytree:
+    """ZeRO-3 layout: every parameter sharded over the *flattened* mesh
+    (all axes), on its largest divisible dim.  Weights carry no math-axis
+    sharding, so GSPMD all-gathers them per layer (ring, overlappable)
+    instead of all-reducing activations -- the right trade when
+    tokens-per-device x d_model  >>  params-per-layer / n_devices.
+    """
+    axes = tuple(mesh.axis_names)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+
+    def spec_for(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        dims = sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i])
+        for i in dims:
+            if leaf.shape[i] % total == 0:
+                spec = [None] * leaf.ndim
+                spec[i] = axes
+                return P(*spec)
+        return P()  # tiny tensors replicate
+    return jax.tree_util.tree_map_with_path(spec_for, params_abstract)
+
+
+def batch_spec(mesh, *leading_data: bool) -> P:
+    """Spec for activations whose dim0 is the (global) batch."""
+    dp = _dp_axes(mesh)
+    return P(dp)
+
+
+def _dp_axes(mesh) -> Any:
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else "data"
+
+
+def input_pspecs(cfg, mesh, kind: str, seq_shard: bool = False) -> dict:
+    """PartitionSpecs for the input batch of each step kind."""
+    dp = _dp_axes(mesh)
+    if kind == "train" or kind == "prefill":
+        specs = {"tokens": P(dp, None), "labels": P(dp, None),
+                 "loss_mask": P(dp, None)}
+        if cfg.frontend == "vision":
+            specs["vision_embeds"] = P(dp, None, None)
+        if cfg.enc_dec:
+            specs["enc_frames"] = P(dp, None, None)
+        if kind == "prefill":
+            specs.pop("labels")
+            specs.pop("loss_mask")
+        return specs
+    raise ValueError(kind)
+
+
+def cache_pspecs(cfg, mesh, caches_abstract: Pytree,
+                 seq_shard: bool = False) -> Pytree:
+    """KV/SSM cache specs for decode.
+
+    Default: batch over DP, heads over model.  seq_shard (long-context,
+    batch=1): shard the cache *sequence* over the data axis instead --
+    sequence parallelism for the memory-bound decode GEMV.
+    """
+    dp = _dp_axes(mesh)
+
+    def spec_for(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1]
+        # stacked leading layer dims: leaf ndim tells us how many
+        if name in ("k", "v", "ck", "cv"):  # (..., B, S, KH, Dh)
+            base = (P(None, dp, MODEL, None) if seq_shard
+                    else P(dp, None, MODEL, None))
+        elif name in ("k_scale", "v_scale"):  # (..., B, S, KH)
+            base = (P(None, dp, MODEL) if seq_shard
+                    else P(dp, None, MODEL))
+        elif name == "latent":            # (..., B, S, r)
+            base = P(None, dp, None) if seq_shard else P(dp, None, None)
+        elif name == "k_rope":            # (..., B, S, rd)
+            base = P(None, dp, None) if seq_shard else P(dp, None, None)
+        elif name == "ssm":               # (..., B, H, P, N)
+            base = (P(None, MODEL, None, None) if seq_shard
+                    else P(dp, MODEL, None, None))
+        elif name in ("conv_x",):         # (..., B, K-1, di)
+            base = (P(None, None, MODEL) if seq_shard
+                    else P(dp, None, MODEL))
+        elif name in ("conv_bc",):        # (..., B, K-1, 2gn)
+            base = P(None, None, None) if seq_shard else P(dp, None, None)
+        else:
+            base = P()
+        spec = _right_align(base, leaf.ndim)
+        return fit_spec(spec, leaf.shape, mesh)
+    return jax.tree_util.tree_map_with_path(spec_for, caches_abstract)
+
+
+def to_shardings(mesh, pspecs: Pytree) -> Pytree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

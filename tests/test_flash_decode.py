@@ -1,0 +1,58 @@
+"""Flash-decode Pallas kernel vs oracle: shape/dtype sweep + properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.attention.ops import decode_attention
+from repro.kernels.attention.ref import decode_attention_ref
+
+
+def _mk(b, s, kh, g, dh, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, kh, g, dh)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, kh, dh)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, kh, dh)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,kh,g,dh,block", [
+    (1, 512, 2, 4, 64, 128),
+    (2, 1024, 4, 8, 128, 256),
+    (1, 256, 1, 1, 32, 64),
+])
+def test_flash_decode_matches_ref(b, s, kh, g, dh, block, dtype):
+    q, k, v = _mk(b, s, kh, g, dh, dtype)
+    kv_len = s - 16
+    got = decode_attention(q, k, v, kv_len, block_s=block)
+    want = decode_attention_ref(q, k, v, kv_len)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(kv_len=st.integers(1, 512), seed=st.integers(0, 1000))
+def test_flash_decode_kv_len_property(kv_len, seed):
+    """Masked positions never influence the result."""
+    q, k, v = _mk(1, 512, 2, 2, 64, jnp.float32, seed)
+    got = decode_attention(q, k, v, kv_len, block_s=128)
+    # poison the masked tail: result must not change
+    k2 = k.at[:, kv_len:].set(1e6)
+    v2 = v.at[:, kv_len:].set(-1e6)
+    got2 = decode_attention(q, k2, v2, kv_len, block_s=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(got2),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_flash_decode_is_convex_combination():
+    """Output rows lie within the convex hull of V rows (softmax weights)."""
+    q, k, v = _mk(1, 256, 1, 2, 32, jnp.float32, 7)
+    out = decode_attention(q, k, v, 256, block_s=64)
+    vmax = np.asarray(v).max(axis=(0, 1))
+    vmin = np.asarray(v).min(axis=(0, 1))
+    o = np.asarray(out)[0, 0]
+    assert (o <= vmax + 1e-4).all() and (o >= vmin - 1e-4).all()

@@ -1,0 +1,105 @@
+"""Faithful-reproduction tests: every number the paper states, as asserts.
+
+These pin the theory layer to the paper's own claims (EXPERIMENTS.md
+§Paper-claims) -- the 'baseline' the beyond-paper work builds on.
+"""
+import math
+
+import pytest
+
+from repro.core import (A100_80G, GH200, TPU_V5E, best_case_speedup,
+                        gemv, machine_balance, scale, spmv_csr, stencil,
+                        speedup_bound_intensity, speedup_unoverlapped,
+                        temporal_depth_to_compute_bound,
+                        tensor_core_upper_bound, workload_upper_bound)
+
+
+def test_scale_intensity_is_one_sixteenth():
+    # Paper §3.1: W=1, Q=2D, I = 1/16 in FP64.
+    t = scale(1_000_000, dsize=8)
+    assert t.intensity == pytest.approx(1 / 16)
+
+
+def test_gemv_intensity_quarter():
+    # Paper Eq. 7: I(GEMV) ~= 2/D = 1/4 for FP64.
+    t = gemv(8192, 8192, dsize=8)
+    assert t.intensity == pytest.approx(1 / 4, rel=1e-3)
+
+
+def test_spmv_csr_intensity_sixth():
+    # Paper Eq. 10: I ~= 2/(D+I) = 1/6 with D=8, I=4.
+    t = spmv_csr(m=100_000, n=100_000, nnz=50_000_000, dsize=8, isize=4)
+    assert t.intensity == pytest.approx(1 / 6, rel=1e-2)
+
+
+def test_2d5pt_intensity():
+    # Paper Eq. 12: I(2d5pt) = |S|/D = 5/8.
+    t = stencil(5, t=1, dsize=8)
+    assert t.intensity == pytest.approx(5 / 8)
+
+
+def test_temporal_blocking_threshold_gh200():
+    # Paper Eq. 14: with the paper's quoted B_GH200 = 9.99, t > 15.98.
+    t_min = temporal_depth_to_compute_bound(5, balance=9.99, dsize=8)
+    assert t_min == pytest.approx(15.98, abs=0.01)
+
+
+def test_fp64_tensor_core_bound_is_1_33():
+    # Paper Eq. 23 with alpha=2 (V100/A100/H100 FP64): < 1.33x.
+    assert tensor_core_upper_bound(2.0) == pytest.approx(4 / 3)
+
+
+def test_alpha_inf_bound_is_2():
+    # Paper Eq. 23 as alpha -> inf: < 2x.
+    assert tensor_core_upper_bound(1e12) == pytest.approx(2.0, abs=1e-9)
+
+
+def test_gemv_workload_bound_a100():
+    # Paper Eq. 24 example: Speedup_A100(GEMV) < 1.05.
+    b = machine_balance(A100_80G, "vector")  # 9.7/1.94 = 5.0
+    s = workload_upper_bound(1 / 4, b)
+    assert s == pytest.approx(1.05, abs=0.002)
+
+
+def test_a100_alpha_is_2():
+    # Table 1: FP64 CUDA core 9.7 TF, tensor core 19.5 TF.
+    assert A100_80G.alpha == pytest.approx(2.0, rel=0.01)
+    assert GH200.alpha == pytest.approx(2.0, rel=0.02)
+
+
+def test_bound_ordering():
+    # Eq. 22 <= Eq. 23 for memory-bound kernels (B/I > 1).
+    for alpha in (1.5, 2.0, 16.0, 100.0):
+        for ratio in (1.001, 2.0, 40.0, 4000.0):
+            eq22 = speedup_bound_intensity(alpha, 1.0, ratio)
+            assert eq22 <= tensor_core_upper_bound(alpha) + 1e-12
+
+
+def test_exact_speedup_below_bounds():
+    # Eq. 19 with explicit times is always below Eq. 22's I/B form.
+    alpha = 2.0
+    t_cmp, t_mem = 1.0, 3.0  # memory-bound: B/I = 3
+    s = speedup_unoverlapped(alpha, t_cmp, t_mem, t_others=0.5)
+    assert s < speedup_bound_intensity(alpha, 1.0, 3.0)
+    assert s > 1.0
+
+
+def test_tpu_v5e_scale_bound_is_nil():
+    # DESIGN.md §2: on v5e the workload bound for f32 SCALE is ~1.014 --
+    # the matrix engine can buy at most 1.4% even with alpha ~ 26.
+    t = scale(1, dsize=4)
+    s = best_case_speedup(TPU_V5E, t.intensity)
+    assert 1.0 < s < 1.014
+
+
+def test_memory_bound_classification_matches_fig2():
+    # Fig. 2: SCALE, SpMV, 2d5pt, GEMV are memory-bound on GH200 (FP64).
+    from repro.core import is_memory_bound
+    for t in (scale(1), gemv(4096, 4096), spmv_csr(4096, 4096, 9 * 4096),
+              stencil(5)):
+        assert is_memory_bound(t.intensity, GH200, "vector")
+    # 2d49pt with t=1: I = 49/8 = 6.125 > B_A100(5.0) -> compute-bound on
+    # A100 (paper §5.5 'Compute-Bound Cases'), memory-bound on GH200 (8.5).
+    t49 = stencil(49, t=1, dsize=8)
+    assert not is_memory_bound(t49.intensity, A100_80G, "vector")
+    assert is_memory_bound(t49.intensity, GH200, "vector")
