@@ -1,0 +1,89 @@
+"""Generic registry-driven kernel benchmark: kernel x engine x size x dtype.
+
+Replaces the per-kernel ``bench_*`` modules: every ``EngineOp`` in
+``repro.kernels.registry`` is swept over its advertised sizes and
+dtypes.  Per sweep point we check interpret-mode correctness of each
+engine variant against the oracle, time the XLA-CPU reference (the
+hardware-relative signal available in this container -- interpret-mode
+Pallas wall time would measure the emulator, so per-engine records
+share one ``ref_us_per_call``), and report the analytic v5e
+memory-floor time plus the paper's matrix-engine ceiling from the
+memoized Advice.  CSV rows go to stdout; the same records land in
+``runs/BENCH_<kernel>.json`` for cross-PR perf tracking.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Optional
+
+import numpy as np
+
+from repro.core.dispatch import DEFAULT_DISPATCHER
+from repro.kernels import registry
+
+from .common import emit, time_fn, write_json
+
+
+def records_for(op) -> List[dict]:
+    """One record per (engine, size, dtype) for a registered kernel."""
+    rng = np.random.default_rng(0)
+    hw = DEFAULT_DISPATCHER.hw
+    recs = []
+    for size in op.bench_sizes:
+        for dtype in op.dtypes:
+            args, kw = op.make_inputs(rng, size, dtype)
+            advice = DEFAULT_DISPATCHER.advise(op, *args, **kw)
+            traits = op.traits(*args, **kw)
+            want = np.asarray(op.reference(*args, **kw), np.float32)
+            us = time_fn(lambda: op.reference(*args, **kw))
+            pred_us = traits.traffic_bytes / hw.mem_bw * 1e6
+            for engine in sorted(op.engines):
+                got = np.asarray(op(*args, engine=engine, **kw), np.float32)
+                err = float(np.max(np.abs(got - want)))
+                recs.append({
+                    "kernel": op.name,
+                    "engine": engine,
+                    "size": size,
+                    "dtype": dtype,
+                    # one shared timing per (size, dtype): the oracle's
+                    # XLA-CPU wall time, NOT the engine variant's
+                    "ref_us_per_call": round(us, 1),
+                    "max_err": err,
+                    "intensity": traits.intensity,
+                    "memory_bound": advice.memory_bound,
+                    "engine_auto": advice.engine,
+                    "pred_us_v5e": round(pred_us, 3),
+                    "mxu_ceiling": advice.max_speedup_matrix,
+                })
+    return recs
+
+
+def rows(names: Optional[Iterable[str]] = None,
+         json_dir: Optional[str] = "runs") -> List[dict]:
+    wanted = set(names) if names is not None else None
+    out = []
+    for op in registry.all_ops():
+        if wanted is not None and op.name not in wanted:
+            continue
+        recs = records_for(op)
+        if json_dir:
+            write_json(op.name, recs, json_dir)
+        for r in recs:
+            out.append({
+                "name": (f"{r['kernel']}/{r['engine']}/n={r['size']}/"
+                         f"{r['dtype']}"),
+                "us_per_call": f"{r['ref_us_per_call']:.1f}",
+                "derived": (f"pred_us_v5e={r['pred_us_v5e']};"
+                            f"I={r['intensity']:.4f};"
+                            f"auto={r['engine_auto']};"
+                            f"mxu_ceiling={r['mxu_ceiling']:.4f}x;"
+                            f"err={r['max_err']:.2e}"),
+            })
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

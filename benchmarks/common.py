@@ -1,6 +1,8 @@
-"""Shared benchmark utilities: timing, CSV rows, analytic predictions."""
+"""Shared benchmark utilities: timing, CSV rows, JSON artifacts."""
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable, List
 
@@ -24,3 +26,18 @@ def emit(rows: List[dict]) -> None:
     """Print ``name,us_per_call,derived`` CSV rows."""
     for r in rows:
         print(f"{r['name']},{r.get('us_per_call', '')},{r.get('derived', '')}")
+
+
+def write_json(kernel: str, records: List[dict],
+               out_dir: str = "runs") -> str:
+    """Write machine-readable per-kernel records to BENCH_<kernel>.json.
+
+    One record per (engine, size, dtype) sweep point so the perf
+    trajectory is diffable across PRs.
+    """
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{kernel}.json")
+    with open(path, "w") as f:
+        json.dump(records, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path

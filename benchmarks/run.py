@@ -1,34 +1,48 @@
-"""Benchmark harness: one module per paper table/figure.
+"""Benchmark harness.
 
-Prints ``name,us_per_call,derived`` CSV rows:
-  bench_bounds   -- Table 1 + Eq. 14/23/24 (theory)
-  bench_roofline -- Fig. 2 (two-ceiling roofline placements)
-  bench_scale    -- Fig. 6 (STREAM SCALE, VPU vs MXU)
-  bench_spmv     -- Fig. 7 / Table 2 (SpMV, cuSPARSE-role vs DASP-role)
-  bench_stencil  -- Fig. 8 / Table 3 (stencil suite, both engines)
+Theory modules reproduce the paper's analytic tables; every *kernel*
+benchmark is discovered from ``repro.kernels.registry`` and swept by the
+one generic driver in ``bench_kernels`` -- there is no per-kernel module
+list to maintain.
+
+  bounds         -- Table 1 + Eq. 14/23/24 (theory)
+  roofline       -- Fig. 2 (two-ceiling roofline placements)
+  kernels        -- every registered kernel x engine x size x dtype
+  <kernel name>  -- one registered kernel (e.g. ``scale``, ``triad``)
+
+Prints ``name,us_per_call,derived`` CSV rows; kernel sweeps also write
+``runs/BENCH_<kernel>.json``.
 """
 from __future__ import annotations
 
 import sys
 
-from . import (bench_bounds, bench_roofline, bench_scale, bench_spmv,
-               bench_stencil)
+from repro.kernels import registry
+
+from . import bench_bounds, bench_kernels, bench_roofline
 from .common import emit
 
-ALL = {
+THEORY = {
     "bounds": bench_bounds,
     "roofline": bench_roofline,
-    "scale": bench_scale,
-    "spmv": bench_spmv,
-    "stencil": bench_stencil,
 }
 
 
 def main() -> None:
-    which = sys.argv[1:] or sorted(ALL)
+    kernel_names = set(registry.names())
+    which = sys.argv[1:] or (sorted(THEORY) + ["kernels"])
     print("name,us_per_call,derived")
     for key in which:
-        emit(ALL[key].rows())
+        if key in THEORY:
+            emit(THEORY[key].rows())
+        elif key == "kernels":
+            emit(bench_kernels.rows())
+        elif key in kernel_names:
+            emit(bench_kernels.rows([key]))
+        else:
+            raise SystemExit(
+                f"unknown benchmark {key!r}; have "
+                f"{sorted(THEORY) + ['kernels'] + sorted(kernel_names)}")
 
 
 if __name__ == "__main__":

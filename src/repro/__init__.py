@@ -1,0 +1,1 @@
+"""Paper reproduction package: Can Tensor Cores Benefit Memory-Bound Kernels? (No!)"""

@@ -7,9 +7,12 @@ Layers:
   intensity  -- per-workload W/Q/I formulas (paper §3)
   bounds     -- matrix-engine speedup bounds (Eq. 17-24)
   advisor    -- engine dispatch policy (paper §6 as code)
+  dispatch   -- memoized advisor routing + shared Pallas wrappers
   analysis   -- compiled-HLO roofline terms (dry-run deliverable g)
 """
 from .advisor import DEFAULT_ADVISOR, Advice, EngineAdvisor
+from .dispatch import (DEFAULT_DISPATCHER, Dispatcher, elementwise_call,
+                       normalize_engine)
 from .analysis import CollectiveStats, RooflineReport, analyze, collective_stats
 from .balance import is_memory_bound, machine_balance, time_compute, time_memory
 from .bounds import (best_case_speedup, break_even_alpha,
@@ -17,9 +20,9 @@ from .bounds import (best_case_speedup, break_even_alpha,
                      speedup_unoverlapped, tensor_core_upper_bound,
                      workload_upper_bound)
 from .hw import A100_80G, GH200, PLATFORMS, TPU_V5E, HardwareSpec, get_platform
-from .intensity import (KernelTraits, gemv, paper_table, scale, spmv_bell,
-                        spmv_csr, stencil, stencil_matmul,
-                        temporal_depth_to_compute_bound)
+from .intensity import (KernelTraits, axpy, gemv, paper_table, scale,
+                        spmv_bell, spmv_csr, stencil, stencil_matmul,
+                        temporal_depth_to_compute_bound, triad)
 from .roofline import (RooflinePoint, attainable, operational_intensity,
                        place, roofline_table)
 

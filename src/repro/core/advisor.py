@@ -77,15 +77,4 @@ class EngineAdvisor:
             intensity=i, balance_vector=b_vec, balance_matrix=b_mat,
             max_speedup_matrix=ceiling, reason=reason)
 
-    def choose(self, traits: KernelTraits, engine: str = "auto") -> str:
-        """Resolve an ``engine`` flag ('auto'|'mxu'|'vpu') to an engine."""
-        if engine in ("mxu", "matrix"):
-            return "matrix"
-        if engine in ("vpu", "vector"):
-            return "vector"
-        if engine != "auto":
-            raise ValueError(f"unknown engine {engine!r}")
-        return self.advise(traits).engine
-
-
 DEFAULT_ADVISOR = EngineAdvisor()

@@ -1,0 +1,221 @@
+"""Engine-dispatch runtime: one place that turns the paper's decision
+framework into kernel launches.
+
+Every kernel family used to hand-roll three things: (1) the advisor
+lookup that routes memory-bound work to the vector engine, (2) the
+flatten/pad/tile/unpad plumbing around ``pallas_call``, and (3) the
+``interpret`` flag threading.  This module owns all three:
+
+  * ``Dispatcher`` -- resolves ``engine='auto'|'vpu'|'mxu'`` against the
+    advisor, memoizing one ``Advice`` per (kernel, shape, dtype,
+    hardware) so steady-state dispatch is a dict hit, not a roofline
+    re-derivation.
+  * ``elementwise_call`` -- the shared flatten/pad/tile/unpad wrapper and
+    block-spec construction for same-shape elementwise kernels (SCALE,
+    STREAM Triad, AXPY, ...): a kernel family supplies only its per-tile
+    Pallas bodies.
+
+Kernel families register their bodies as an ``EngineOp`` in
+``repro.kernels.registry``; ``DEFAULT_DISPATCHER.run`` is the single
+path from a registered op + arguments to a Pallas launch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Hashable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .advisor import DEFAULT_ADVISOR, Advice, EngineAdvisor
+from .intensity import KernelTraits
+
+__all__ = [
+    "DEFAULT_DISPATCHER", "Dispatcher", "default_cache_key",
+    "elementwise_call", "normalize_engine",
+    "ELEMENTWISE_BLOCK_ROWS", "ELEMENTWISE_LANES",
+]
+
+_ENGINE_ALIASES = {
+    "mxu": "matrix", "matrix": "matrix",
+    "vpu": "vector", "vector": "vector",
+}
+
+
+def normalize_engine(engine: str) -> Optional[str]:
+    """'auto' -> None (advisor decides); 'mxu'/'vpu' aliases -> canonical."""
+    if engine == "auto":
+        return None
+    try:
+        return _ENGINE_ALIASES[engine]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {engine!r}; expected 'auto', "
+            f"{sorted(set(_ENGINE_ALIASES))}") from None
+
+
+def _probe(x: Any) -> Hashable:
+    """Reduce one call argument to a hashable dispatch-cache component.
+
+    Arrays contribute (shape, dtype) -- their values never change the
+    roofline position.  Containers and (frozen or not) dataclasses such
+    as BlockEll recurse field-wise so unhashable array members don't
+    poison the key.
+    """
+    if hasattr(x, "shape") and hasattr(x, "dtype"):
+        return ("arr", tuple(x.shape), str(x.dtype))
+    if dataclasses.is_dataclass(x) and not isinstance(x, type):
+        try:
+            hash(x)
+            return x
+        except TypeError:
+            return (type(x).__name__,) + tuple(
+                _probe(getattr(x, f.name)) for f in dataclasses.fields(x))
+    if isinstance(x, (tuple, list)):
+        return tuple(_probe(e) for e in x)
+    if isinstance(x, dict):
+        return tuple((k, _probe(v)) for k, v in sorted(x.items()))
+    try:
+        hash(x)
+        return x
+    except TypeError:
+        return ("repr", repr(x))
+
+
+def default_cache_key(*args, **kwargs) -> Hashable:
+    return (_probe(args), _probe(kwargs))
+
+
+class Dispatcher:
+    """Advisor-backed engine router with a memoized Advice cache."""
+
+    def __init__(self, advisor: Optional[EngineAdvisor] = None):
+        self.advisor = advisor if advisor is not None else DEFAULT_ADVISOR
+        self._cache: Dict[Hashable, Advice] = {}
+        self._hits = 0
+        self._misses = 0
+
+    @property
+    def hw(self):
+        return self.advisor.hw
+
+    # -- advice ------------------------------------------------------------
+
+    def _memoized(self, key: Hashable,
+                  make: Callable[[], Advice]) -> Advice:
+        advice = self._cache.get(key)
+        if advice is None:
+            self._misses += 1
+            advice = self._cache[key] = make()
+        else:
+            self._hits += 1
+        return advice
+
+    def advise(self, op, *args, **kwargs) -> Advice:
+        """Memoized Advice for one registered op + call arguments.
+
+        The cache key is (kernel, hardware, shapes/dtypes/static params);
+        the op's ``KernelTraits`` factory only runs on a miss.
+        """
+        key_fn = op.cache_key or default_cache_key
+        key = (op.name, self.hw.name, key_fn(*args, **kwargs))
+        return self._memoized(
+            key, lambda: self.advisor.advise(op.traits(*args, **kwargs)))
+
+    def advise_traits(self, traits: KernelTraits) -> Advice:
+        """Memoized Advice for hand-built traits (launch/analysis paths)."""
+        key = (traits.name, self.hw.name, traits.work_flops,
+               traits.traffic_bytes)
+        return self._memoized(key, lambda: self.advisor.advise(traits))
+
+    # -- dispatch ----------------------------------------------------------
+
+    def resolve(self, op, *args, engine: str = "auto", **kwargs) -> str:
+        """Resolve an engine flag to 'vector'|'matrix' for this call."""
+        forced = normalize_engine(engine)
+        if forced is not None:
+            return forced
+        return self.advise(op, *args, **kwargs).engine
+
+    def run(self, op, *args, engine: str = "auto", interpret: bool = True,
+            **kwargs):
+        """Advisor-route and launch one registered op."""
+        eng = self.resolve(op, *args, engine=engine, **kwargs)
+        fn = op.engines.get(eng)
+        if fn is None:
+            raise ValueError(
+                f"kernel {op.name!r} has no {eng!r} variant "
+                f"(has {sorted(op.engines)})")
+        return fn(*args, interpret=interpret, **kwargs)
+
+    def cache_info(self) -> Dict[str, int]:
+        return {"size": len(self._cache), "hits": self._hits,
+                "misses": self._misses}
+
+    def cache_clear(self) -> None:
+        self._cache.clear()
+        self._hits = self._misses = 0
+
+
+DEFAULT_DISPATCHER = Dispatcher()
+
+
+# --------------------------------------------------------------------------
+# shared elementwise flatten/pad/tile/unpad wrapper
+# --------------------------------------------------------------------------
+
+ELEMENTWISE_LANES = 1024      # row width the wrapper reshapes to
+ELEMENTWISE_BLOCK_ROWS = 256  # 256 x 1024 x 4B = 1 MiB VMEM blocks
+
+
+@functools.partial(jax.jit, static_argnames=("body", "block_rows",
+                                             "interpret"))
+def _elementwise_grid(body, scalars, arrays, *, block_rows: int,
+                      interpret: bool):
+    """1D grid over (rows, lanes) tiles; scalars ride along as (1,1) refs."""
+    rows, lanes = arrays[0].shape
+    scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    tile_spec = pl.BlockSpec((block_rows, lanes), lambda i: (i, 0))
+    return pl.pallas_call(
+        body,
+        grid=(rows // block_rows,),
+        in_specs=[scalar_spec] * len(scalars) + [tile_spec] * len(arrays),
+        out_specs=tile_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), arrays[0].dtype),
+        interpret=interpret,
+    )(*scalars, *arrays)
+
+
+def elementwise_call(body: Callable, arrays: Sequence[jnp.ndarray],
+                     scalars: Sequence[Any] = (), *, interpret: bool = True,
+                     lanes: int = ELEMENTWISE_LANES,
+                     block_rows: int = ELEMENTWISE_BLOCK_ROWS) -> jnp.ndarray:
+    """Run an elementwise Pallas body over same-shape arrays of any shape.
+
+    ``body(*scalar_refs, *array_refs, o_ref)`` sees (block_rows, lanes)
+    tiles; this wrapper owns the flatten -> pad-to-tile -> reshape ->
+    grid/block-spec construction -> unpad round trip that every
+    elementwise kernel family previously duplicated.
+    """
+    arrays = tuple(arrays)
+    shape, dtype = arrays[0].shape, arrays[0].dtype
+    for a in arrays[1:]:
+        if a.shape != shape:
+            raise ValueError(f"elementwise arrays disagree: {a.shape} vs "
+                             f"{shape}")
+    n = arrays[0].size
+    tile = block_rows * lanes
+    pad = (-n) % tile
+    flats = []
+    for a in arrays:
+        f = a.reshape(-1)
+        if pad:
+            f = jnp.pad(f, (0, pad))
+        flats.append(f.reshape(-1, lanes))
+    scalars2d = tuple(jnp.asarray(s, jnp.float32).reshape(1, 1)
+                      for s in scalars)
+    out = _elementwise_grid(body, scalars2d, tuple(flats),
+                            block_rows=block_rows, interpret=interpret)
+    return out.reshape(-1)[:n].reshape(shape).astype(dtype)

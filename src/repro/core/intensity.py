@@ -33,6 +33,22 @@ def scale(n: int, dsize: int = 8) -> KernelTraits:
     return KernelTraits("SCALE", float(n), 2.0 * n * dsize)
 
 
+def triad(n: int, dsize: int = 8) -> KernelTraits:
+    """STREAM Triad a_i = b_i + q * c_i: two loads + one store, mul+add.
+
+    W = 2n, Q = 3*n*D, I = 2/(3D)  -> 1/12 for FP64.
+    """
+    return KernelTraits("TRIAD", 2.0 * n, 3.0 * n * dsize)
+
+
+def axpy(n: int, dsize: int = 8) -> KernelTraits:
+    """AXPY y_i = a * x_i + y_i: two loads + one store, mul+add.
+
+    Same roofline position as Triad: W = 2n, Q = 3*n*D, I = 2/(3D).
+    """
+    return KernelTraits("AXPY", 2.0 * n, 3.0 * n * dsize)
+
+
 # --- GEMV / SpMV (paper §3.2) ------------------------------------------------
 
 def gemv(m: int, n: int, dsize: int = 8) -> KernelTraits:

@@ -1,3 +1,16 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Kernel families, unified behind the ``EngineOp`` registry.
+
+Each family directory ships ``<name>.py`` (per-engine Pallas bodies),
+``ref.py`` (pure-jnp oracle), and ``ops.py`` (public wrapper + one
+``registry.register(EngineOp(...))`` call).  Consumers -- benchmarks,
+tests, launchers -- discover kernels via ``registry`` instead of
+per-kernel module lists:
+
+    from repro.kernels import registry
+    registry.names()          # ('attention', 'axpy', 'scale', ...)
+    registry.get("triad")     # advisor-routed callable EngineOp
+"""
+from . import registry
+from .registry import EngineOp
+
+__all__ = ["EngineOp", "registry"]

@@ -24,7 +24,8 @@ NEG_INF = -1e30
 
 
 def _flash_decode_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref,
-                         m_ref, l_ref, acc_ref, *, block_s: int):
+                         m_ref, l_ref, acc_ref, *, block_s: int,
+                         engine: str):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -38,7 +39,10 @@ def _flash_decode_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref,
     v = v_ref[0].astype(jnp.float32)          # (block_s, Dh)
     scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
 
-    s = jax.lax.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if engine == "matrix":
+        s = jax.lax.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    else:  # vector engine: broadcast-multiply + lane reduction, no MXU
+        s = jnp.sum(q[:, None, :] * k[None, :, :], axis=-1) * scale
     pos = j * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     s = jnp.where(pos < kvlen_ref[0], s, NEG_INF)
 
@@ -47,8 +51,11 @@ def _flash_decode_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref,
     p = jnp.exp(s - m_new)                    # (G, block_s)
     corr = jnp.exp(m_prev - m_new)
     l_new = l_prev * corr + p.sum(axis=-1, keepdims=True)
-    acc_ref[...] = (acc_ref[...] * corr
-                    + jax.lax.dot(p, v, preferred_element_type=jnp.float32))
+    if engine == "matrix":
+        pv = jax.lax.dot(p, v, preferred_element_type=jnp.float32)
+    else:
+        pv = jnp.sum(p[:, :, None] * v[None, :, :], axis=1)
+    acc_ref[...] = acc_ref[...] * corr + pv
     m_ref[...] = m_new
     l_ref[...] = l_new
 
@@ -59,11 +66,16 @@ def _flash_decode_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_s", "interpret"))
+                   static_argnames=("block_s", "engine", "interpret"))
 def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                 kv_len, *, block_s: int = 512,
+                 kv_len, *, block_s: int = 512, engine: str = "matrix",
                  interpret: bool = True) -> jnp.ndarray:
     """q: (B, KH, G, Dh); k,v: (B, S, KH, Dh); kv_len scalar int32.
+
+    ``engine`` picks the per-block compute: 'matrix' drives the MXU with
+    (G, Dh) x (Dh, block_s) dots; 'vector' does the same contraction as
+    broadcast-multiply + reductions on the VPU.  Either way the cache is
+    streamed exactly once -- the only lever the paper leaves.
 
     Returns (B, KH, G, Dh)."""
     b, kh, g, dh = q.shape
@@ -90,7 +102,8 @@ def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         ],
     )
     out = pl.pallas_call(
-        functools.partial(_flash_decode_kernel, block_s=block_s),
+        functools.partial(_flash_decode_kernel, block_s=block_s,
+                          engine=engine),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b * kh, g, dh), q.dtype),
         interpret=interpret,

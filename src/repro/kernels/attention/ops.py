@@ -1,28 +1,79 @@
-"""Public decode-attention op with the advisor's memory-bound analysis."""
+"""Public decode-attention op, registered as an ``EngineOp``.
+
+Single-token GQA attention is GEMV-shaped: I ~= 2*G/D flop/byte over the
+KV cache, memory-bound by ~100x on v5e at production sizes.  The advisor
+(and the paper) say the only lever is streaming the cache once, which
+both engine variants do -- they differ only in whether the per-block
+contraction drives the MXU or the VPU.
+"""
 from __future__ import annotations
 
+import functools
+
 import jax.numpy as jnp
+import numpy as np
 
-from ...core import DEFAULT_ADVISOR
 from ...core.intensity import KernelTraits
+from ..registry import EngineOp, register
 from .flash_decode import flash_decode
+from .ref import decode_attention_ref
 
-__all__ = ["decode_attention"]
+__all__ = ["ATTENTION_OP", "decode_attention"]
 
 
-def decode_attention(q, k, v, kv_len, *, block_s: int = 512,
-                     interpret: bool = True):
-    """Single-token GQA attention against a KV cache.
-
-    Intensity ~= (4 flops per cache element) / (2 bytes per element) --
-    memory-bound by ~100x on v5e; the advisor (and the paper) say the only
-    lever is streaming the cache once, which this kernel does.
-    """
+def _traits(q, k, v, kv_len, *, block_s=None):
+    del v, kv_len, block_s
     b, kh, g, dh = q.shape
     s = k.shape[1]
     work = 4.0 * b * kh * g * s * dh
     traffic = 2.0 * b * s * kh * dh * k.dtype.itemsize
-    traits = KernelTraits("flash_decode", work, traffic)
-    DEFAULT_ADVISOR.advise(traits)  # memory-bound; recorded by callers
-    return flash_decode(q, k, v, kv_len, block_s=block_s,
+    return KernelTraits("flash_decode", work, traffic)
+
+
+def _engine_fn(engine: str):
+    def call(q, k, v, kv_len, *, block_s=None, interpret: bool = True):
+        if block_s is None:
+            block_s = min(512, k.shape[1])
+        return flash_decode(q, k, v, kv_len, block_s=block_s,
+                            engine=engine, interpret=interpret)
+    return call
+
+
+def _reference(q, k, v, kv_len, *, block_s=None):
+    del block_s
+    return decode_attention_ref(q, k, v, kv_len)
+
+
+def _make_inputs(rng: np.random.Generator, size: int, dtype: str = "float32"):
+    """size = KV-cache length; a small GQA decode step against it."""
+    b, kh, g, dh = 1, 2, 4, 64
+    q = jnp.asarray(rng.standard_normal((b, kh, g, dh)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, size, kh, dh)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, size, kh, dh)), dtype)
+    return (q, k, v, size - size // 8), {}
+
+
+ATTENTION_OP = register(EngineOp(
+    name="attention",
+    traits=_traits,
+    engines={"vector": _engine_fn("vector"), "matrix": _engine_fn("matrix")},
+    reference=_reference,
+    make_inputs=_make_inputs,
+    bench_sizes=(256, 512),
+    dtypes=("float32", "bfloat16"),
+    test_size=256,
+    doc="flash-decode GQA attention over a KV cache; I ~= 2G/D",
+))
+
+
+def decode_attention(q, k, v, kv_len, *, engine: str = "auto",
+                     block_s: int = None, interpret: bool = True):
+    """Single-token GQA attention against a KV cache.
+
+    Intensity ~= (4 flops per cache element) / (2 bytes per element) --
+    memory-bound by ~100x on v5e; 'auto' therefore routes to the vector
+    variant, with the MXU formulation one flag away (and, per the paper,
+    no faster).
+    """
+    return ATTENTION_OP(q, k, v, kv_len, engine=engine, block_s=block_s,
                         interpret=interpret)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for AXPY: y = a*x + y."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def axpy_ref(a, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """out_i = a * x_i + y_i."""
+    return (jnp.asarray(a, x.dtype) * x + y).astype(x.dtype)

@@ -1,11 +1,38 @@
-"""Public SCALE op: advisor-routed, shape-agnostic wrapper."""
+"""Public SCALE op, registered as an ``EngineOp`` (paper Fig. 6)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
-from ...core import DEFAULT_ADVISOR
 from ...core.intensity import scale as scale_traits
-from .scale import BLOCK_ROWS, LANES, scale_2d
+from ..registry import EngineOp, register
+from .ref import scale_ref
+from .scale import scale_matrix, scale_vector
+
+__all__ = ["SCALE_OP", "scale"]
+
+
+def _traits(b, q):
+    del q
+    return scale_traits(b.size, dsize=b.dtype.itemsize)
+
+
+def _make_inputs(rng: np.random.Generator, size: int, dtype: str = "float32"):
+    b = jnp.asarray(rng.standard_normal(size), dtype)
+    return (b, 1.5), {}
+
+
+SCALE_OP = register(EngineOp(
+    name="scale",
+    traits=_traits,
+    engines={"vector": scale_vector, "matrix": scale_matrix},
+    reference=scale_ref,
+    make_inputs=_make_inputs,
+    bench_sizes=(2**18, 2**20, 2**22),
+    dtypes=("float32", "bfloat16"),
+    test_size=300_000,
+    doc="STREAM SCALE a = q*b; I = 1/(2D), memory-bound everywhere",
+))
 
 
 def scale(b: jnp.ndarray, q, *, engine: str = "auto",
@@ -15,15 +42,4 @@ def scale(b: jnp.ndarray, q, *, engine: str = "auto",
     engine: 'auto' (paper §6 advisor -> VPU, since I=1/(2D) is far below
     machine balance), 'vpu', or 'mxu' (paper Fig.-5 A = B(qI)).
     """
-    traits = scale_traits(b.size, dsize=b.dtype.itemsize)
-    eng = DEFAULT_ADVISOR.choose(traits, engine)
-
-    flat = b.reshape(-1)
-    n = flat.shape[0]
-    tile = BLOCK_ROWS * LANES
-    pad = (-n) % tile
-    if pad:
-        flat = jnp.pad(flat, (0, pad))
-    out = scale_2d(flat.reshape(-1, LANES), q, engine=eng,
-                   interpret=interpret)
-    return out.reshape(-1)[:n].reshape(b.shape)
+    return SCALE_OP(b, q, engine=engine, interpret=interpret)

@@ -1,4 +1,4 @@
-"""Pallas TPU kernels for STREAM SCALE, one per engine (paper §5.1).
+"""Pallas TPU kernel bodies for STREAM SCALE, one per engine (paper §5.1).
 
 Vector engine (VPU): the natural elementwise kernel -- one load, one
 multiply, one store per element.
@@ -10,20 +10,21 @@ the MXU's lanes do useful work (the GPU paper wastes 1/8 on an 8x4 DMMA
 tile; a 128x128 MXU wastes 1/128) -- which, per the theory, is *still*
 irrelevant for this kernel because I = 1/(2D) << B.
 
-Both kernels share a (rows, 1024)-wide layout chosen so each VMEM block
-is (block_rows x 1024) * 4B: MXU/VPU-aligned (multiples of 8 sublanes x
-128 lanes) and small enough to double-buffer in VMEM.
+Tiling, padding, and block-spec construction live in the shared
+``repro.core.dispatch.elementwise_call`` wrapper; this module is only
+the per-tile bodies plus their engine entry points.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-LANES = 1024          # row width the wrapper reshapes to
-BLOCK_ROWS = 256      # 256 x 1024 x 4B = 1 MiB blocks
+from ...core.dispatch import (ELEMENTWISE_BLOCK_ROWS, ELEMENTWISE_LANES,
+                              elementwise_call)
+
+# retained names: the (rows, 1024)-wide layout both engines share
+LANES = ELEMENTWISE_LANES
+BLOCK_ROWS = ELEMENTWISE_BLOCK_ROWS
 
 
 def _scale_vpu_kernel(q_ref, b_ref, o_ref):
@@ -39,22 +40,9 @@ def _scale_mxu_kernel(q_ref, b_ref, o_ref):
         preferred_element_type=jnp.float32).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("engine", "interpret"))
-def scale_2d(b2d: jnp.ndarray, q: jnp.ndarray, *, engine: str = "vector",
-             interpret: bool = True) -> jnp.ndarray:
-    """SCALE over a (rows, LANES) array; rows must divide by BLOCK_ROWS."""
-    rows, lanes = b2d.shape
-    assert rows % BLOCK_ROWS == 0, rows
-    kernel = _scale_vpu_kernel if engine == "vector" else _scale_mxu_kernel
-    q2 = jnp.asarray(q, jnp.float32).reshape(1, 1)
-    return pl.pallas_call(
-        kernel,
-        grid=(rows // BLOCK_ROWS,),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
-            pl.BlockSpec((BLOCK_ROWS, lanes), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((BLOCK_ROWS, lanes), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((rows, lanes), b2d.dtype),
-        interpret=interpret,
-    )(q2, b2d)
+def scale_vector(b: jnp.ndarray, q, *, interpret: bool = True) -> jnp.ndarray:
+    return elementwise_call(_scale_vpu_kernel, (b,), (q,), interpret=interpret)
+
+
+def scale_matrix(b: jnp.ndarray, q, *, interpret: bool = True) -> jnp.ndarray:
+    return elementwise_call(_scale_mxu_kernel, (b,), (q,), interpret=interpret)

@@ -1,14 +1,51 @@
-"""Public SpMV op: advisor-routed block-ELL matvec."""
+"""Public SpMV op (block-ELL), registered as an ``EngineOp``."""
 from __future__ import annotations
 
-import jax.numpy as jnp
+import functools
 
-from ...core import DEFAULT_ADVISOR
+import jax.numpy as jnp
+import numpy as np
+
 from ...core.intensity import spmv_bell as bell_traits
-from .ref import BlockEll, dense_to_bell
+from ..registry import EngineOp, register
+from .ref import BlockEll, bell_matvec_ref, dense_to_bell
 from .spmv import bell_spmv_bell
 
-__all__ = ["spmv", "BlockEll", "dense_to_bell"]
+__all__ = ["SPMV_OP", "spmv", "BlockEll", "dense_to_bell"]
+
+
+def _traits(bell: BlockEll, x):
+    del x
+    nbr, mb, bm, bn = bell.blocks.shape
+    m, n = bell.shape
+    return bell_traits(m, n, nbr * mb, bm, bn,
+                       dsize=bell.blocks.dtype.itemsize)
+
+
+def _make_inputs(rng: np.random.Generator, size: int, dtype: str = "float32"):
+    """size = row count; a ~5%-dense random matrix with 2x wider columns."""
+    m = max(8, (size // 8) * 8)
+    n = max(128, (2 * size // 128) * 128)
+    a = rng.standard_normal((m, n)).astype(dtype)
+    a = a * (rng.random((m, n)) < 0.05)
+    bell = dense_to_bell(np.asarray(a), bm=8, bn=128)
+    x = jnp.asarray(rng.standard_normal(n), dtype)
+    return (bell, x), {}
+
+
+SPMV_OP = register(EngineOp(
+    name="spmv",
+    traits=_traits,
+    engines={
+        "vector": functools.partial(bell_spmv_bell, engine="vector"),
+        "matrix": functools.partial(bell_spmv_bell, engine="matrix"),
+    },
+    reference=bell_matvec_ref,
+    make_inputs=_make_inputs,
+    bench_sizes=(256, 512),
+    test_size=128,
+    doc="block-ELL SpMV y = A x; I ~ 1/(2D) per stored element",
+))
 
 
 def spmv(bell: BlockEll, x: jnp.ndarray, *, engine: str = "auto",
@@ -19,9 +56,4 @@ def spmv(bell: BlockEll, x: jnp.ndarray, *, engine: str = "auto",
     block-ELL SpMV intensity is ~1/(2D) per stored block element, far
     below machine balance, so auto -> vector engine.
     """
-    nbr, mb, bm, bn = bell.blocks.shape
-    m, n = bell.shape
-    traits = bell_traits(m, n, nbr * mb, bm, bn,
-                         dsize=bell.blocks.dtype.itemsize)
-    eng = DEFAULT_ADVISOR.choose(traits, engine)
-    return bell_spmv_bell(bell, x, engine=eng, interpret=interpret)
+    return SPMV_OP(bell, x, engine=engine, interpret=interpret)

@@ -1,14 +1,52 @@
-"""Public stencil op: advisor-routed, temporal-blocking aware."""
+"""Public stencil op, registered as an ``EngineOp`` (temporal-blocking
+aware: the advisor sees the blocked intensity I_t = t*|S|/D)."""
 from __future__ import annotations
 
-import jax.numpy as jnp
+import functools
 
-from ...core import DEFAULT_ADVISOR
+import jax.numpy as jnp
+import numpy as np
+
 from ...core.intensity import stencil as stencil_traits
+from ..registry import EngineOp, register
 from .defs import TABLE3_DEPTH, StencilSpec, suite
+from .ref import stencil_ref
 from .stencil import stencil_apply
 
-__all__ = ["stencil", "suite", "TABLE3_DEPTH", "StencilSpec"]
+__all__ = ["STENCIL_OP", "stencil", "suite", "TABLE3_DEPTH", "StencilSpec"]
+
+
+def _traits(u, spec: StencilSpec, *, steps: int = 1, block_rows: int = 128):
+    del block_rows
+    return stencil_traits(spec.num_points, t=steps, dsize=u.dtype.itemsize,
+                          npoints_domain=u.size)
+
+
+def _reference(u, spec: StencilSpec, *, steps: int = 1, block_rows: int = 128):
+    del block_rows  # implementation tiling knob; the oracle has none
+    return stencil_ref(u, spec, steps=steps)
+
+
+def _make_inputs(rng: np.random.Generator, size: int, dtype: str = "float32"):
+    """size = 2D domain side; the Table-3 5-point star at its paper depth."""
+    spec = suite()["2d5pt"]
+    u = jnp.asarray(rng.standard_normal((size, size)), dtype)
+    return (u, spec), {"steps": TABLE3_DEPTH["2d5pt"], "block_rows": 64}
+
+
+STENCIL_OP = register(EngineOp(
+    name="stencil",
+    traits=_traits,
+    engines={
+        "vector": functools.partial(stencil_apply, engine="vector"),
+        "matrix": functools.partial(stencil_apply, engine="matrix"),
+    },
+    reference=_reference,
+    make_inputs=_make_inputs,
+    bench_sizes=(128, 256),
+    test_size=48,
+    doc="|S|-point stencil, t fused steps; I_t = t*|S|/D (paper Eq. 13)",
+))
 
 
 def stencil(u: jnp.ndarray, spec: StencilSpec, *, steps: int = 1,
@@ -20,8 +58,5 @@ def stencil(u: jnp.ndarray, spec: StencilSpec, *, steps: int = 1,
     I_t = t * |S| / D (paper Eq. 13): shallow blocking stays memory-bound
     (vector engine), deep blocking can cross the knee.
     """
-    traits = stencil_traits(spec.num_points, t=steps,
-                            dsize=u.dtype.itemsize)
-    eng = DEFAULT_ADVISOR.choose(traits, engine)
-    return stencil_apply(u, spec, steps=steps, engine=eng,
-                         block_rows=block_rows, interpret=interpret)
+    return STENCIL_OP(u, spec, steps=steps, block_rows=block_rows,
+                      engine=engine, interpret=interpret)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for STREAM Triad: a = b + q * c."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def triad_ref(b: jnp.ndarray, c: jnp.ndarray, q) -> jnp.ndarray:
+    """a_i = b_i + q * c_i."""
+    return (b + jnp.asarray(q, b.dtype) * c).astype(b.dtype)

@@ -5,20 +5,39 @@ importing this module touches no jax device state.  The single-pod mesh is
 16x16 = 256 chips (one v5e pod); multi-pod adds a leading "pod" axis for
 2 pods = 512 chips.  The "pod" and "data" axes are both data-parallel
 (gradients reduce over both); "model" carries TP/EP.
+
+``make_auto_mesh``/``mesh_context`` paper over the jax 0.4 -> 0.5+ API
+drift (``axis_types=``/``jax.set_mesh`` only exist on newer jax) so the
+launchers and the multi-device tests run on either.
 """
 from __future__ import annotations
 
 import jax
 
 
+def make_auto_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types where the API supports them."""
+    axis_type = getattr(getattr(jax.sharding, "AxisType", None), "Auto", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, axis_types=(axis_type,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_context(mesh):
+    """``jax.set_mesh(mesh)`` on new jax; the Mesh's own context manager
+    (the classic ``with mesh:`` resource env) on jax < 0.5."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_auto_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for subprocess multi-device tests (8 host devices)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_auto_mesh(shape, axes)

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import ARCHS, get_arch, reduced
-from ..core import TPU_V5E, EngineAdvisor
+from ..core.dispatch import DEFAULT_DISPATCHER
 from ..core.intensity import KernelTraits
 from ..data.synthetic import make_batch
 from ..models import lm
@@ -32,11 +32,11 @@ def main():
     params = lm.init_params(cfg, jax.random.key(0))
     max_len = args.prompt_len + args.gen
 
-    # advisor: the production-size decode step is memory-bound
+    # dispatch layer: the production-size decode step is memory-bound
     kv_bytes = 128 * 32768 * full.n_layers * full.kv_dim * 2 * 2
     traits = KernelTraits("decode@32k", 2.0 * full.param_count() * 128,
                           full.param_count() * 2.0 + kv_bytes)
-    print(f"[advisor] {EngineAdvisor(TPU_V5E).advise(traits)}")
+    print(f"[advisor] {DEFAULT_DISPATCHER.advise_traits(traits)}")
 
     batch = make_batch(cfg, args.batch, args.prompt_len, seed=0)
     logits, caches = jax.jit(

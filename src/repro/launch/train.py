@@ -22,11 +22,14 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import ARCHS, get_arch, reduced
+from ..core.dispatch import DEFAULT_DISPATCHER
+from ..core.intensity import KernelTraits
 from ..data.pipeline import TokenPipeline
 from ..models import lm
 from ..optim.adamw import AdamW, cosine_schedule
 from ..runtime.train_loop import (StragglerWatchdog, TrainLoopConfig, run)
 from ..sharding import rules
+from . import mesh as mesh_mod
 from . import steps as steps_mod
 
 
@@ -51,9 +54,16 @@ def main():
     if args.reduced:
         cfg = reduced(cfg)
     d_mesh, m_mesh = map(int, args.mesh.split("x"))
-    mesh = jax.make_mesh(
-        (d_mesh, m_mesh), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = mesh_mod.make_auto_mesh((d_mesh, m_mesh), ("data", "model"))
+
+    # dispatch layer: a train step is ~6*P flops/token against ~16*P bytes
+    # of params+grads+optimizer state -- compute-bound at any real batch,
+    # the mirror image of the decode path serve.py classifies.
+    tokens = args.batch * args.seq
+    traits = KernelTraits(f"train_step@{cfg.name}",
+                          6.0 * cfg.param_count() * tokens,
+                          16.0 * cfg.param_count())
+    print(f"[advisor] {DEFAULT_DISPATCHER.advise_traits(traits)}")
 
     opt = AdamW(lr=cosine_schedule(args.lr, 10, args.steps))
     pipe = TokenPipeline(cfg, global_batch=args.batch, seq=args.seq)
@@ -67,7 +77,7 @@ def main():
         return params, opt.init(params)
 
     jit_step = jax.jit(step)
-    with jax.set_mesh(mesh):
+    with mesh_mod.mesh_context(mesh):
         loop = TrainLoopConfig(
             total_steps=args.steps, ckpt_every=max(args.steps // 2, 1),
             ckpt_dir=args.ckpt_dir or f"ckpts/{cfg.name}",

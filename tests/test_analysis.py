@@ -30,8 +30,10 @@ def _matmul_chain(L, D=256, B=64):
 def test_xla_cost_analysis_ignores_scan_trip_count():
     """Documents the XLA defect that motivates jaxpr_cost (DESIGN.md)."""
     f, x, ws, expected = _matmul_chain(16)
-    got = jax.jit(f).lower(x, ws).compile().cost_analysis()["flops"]
-    assert got == pytest.approx(expected / 16)  # body counted once
+    ca = jax.jit(f).lower(x, ws).compile().cost_analysis()
+    if isinstance(ca, list):  # jaxlib < 0.4.36: one dict per device
+        ca = ca[0]
+    assert ca["flops"] == pytest.approx(expected / 16)  # body counted once
 
 
 @pytest.mark.parametrize("L", [1, 4, 16])

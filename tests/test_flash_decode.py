@@ -3,7 +3,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional dev dependency (pip install -e .[dev]); property tests
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - skip only the property tests
+    HAVE_HYPOTHESIS = False
+
+
+def _hypothesis_stub():
+    """Placeholder so missing property tests show up as skips, not as
+    silently-uncollected coverage."""
+    pytest.skip("hypothesis not installed (pip install -e .[dev])")
 
 from repro.kernels.attention.ops import decode_attention
 from repro.kernels.attention.ref import decode_attention_ref
@@ -34,18 +45,22 @@ def test_flash_decode_matches_ref(b, s, kh, g, dh, block, dtype):
                                rtol=tol, atol=tol)
 
 
-@settings(max_examples=10, deadline=None)
-@given(kv_len=st.integers(1, 512), seed=st.integers(0, 1000))
-def test_flash_decode_kv_len_property(kv_len, seed):
-    """Masked positions never influence the result."""
-    q, k, v = _mk(1, 512, 2, 2, 64, jnp.float32, seed)
-    got = decode_attention(q, k, v, kv_len, block_s=128)
-    # poison the masked tail: result must not change
-    k2 = k.at[:, kv_len:].set(1e6)
-    v2 = v.at[:, kv_len:].set(-1e6)
-    got2 = decode_attention(q, k2, v2, kv_len, block_s=128)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(got2),
-                               rtol=1e-6, atol=1e-6)
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(kv_len=st.integers(1, 512), seed=st.integers(0, 1000))
+    def test_flash_decode_kv_len_property(kv_len, seed):
+        """Masked positions never influence the result."""
+        q, k, v = _mk(1, 512, 2, 2, 64, jnp.float32, seed)
+        got = decode_attention(q, k, v, kv_len, block_s=128)
+        # poison the masked tail: result must not change
+        k2 = k.at[:, kv_len:].set(1e6)
+        v2 = v.at[:, kv_len:].set(-1e6)
+        got2 = decode_attention(q, k2, v2, kv_len, block_s=128)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(got2),
+                                   rtol=1e-6, atol=1e-6)
+else:
+    def test_flash_decode_kv_len_property():
+        _hypothesis_stub()
 
 
 def test_flash_decode_is_convex_combination():

@@ -1,0 +1,128 @@
+"""Registry + dispatch-layer tests: every registered kernel's engine
+variants agree with its oracle, 'auto' routes memory-bound work to the
+vector engine (the paper's §6 takeaway), and Advice is memoized per
+(kernel, shape, dtype, hardware)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dispatch import (DEFAULT_DISPATCHER, Dispatcher,
+                                 default_cache_key, normalize_engine)
+from repro.kernels import registry
+
+FAMILIES = ("attention", "axpy", "scale", "spmv", "stencil", "triad")
+
+
+def _inputs(op, seed=0, dtype="float32"):
+    rng = np.random.default_rng(seed)
+    return op.make_inputs(rng, op.test_size, dtype)
+
+
+def test_all_families_registered():
+    assert set(FAMILIES) <= set(registry.names())
+
+
+def test_get_unknown_kernel_raises():
+    with pytest.raises(KeyError, match="no kernel"):
+        registry.get("nope")
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_engine_variants_match_reference(name):
+    """Vector and matrix variants both reproduce the pure-jnp oracle --
+    the empirical backbone of 'same result through the same memory
+    path'."""
+    op = registry.get(name)
+    args, kw = _inputs(op)
+    want = np.asarray(op.reference(*args, **kw), np.float32)
+    for engine in ("vector", "matrix"):
+        got = np.asarray(op(*args, engine=engine, **kw), np.float32)
+        assert got.shape == want.shape
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4,
+                                   err_msg=f"{name}/{engine}")
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_auto_routes_memory_bound_to_vector(name):
+    """Every registered kernel is memory-bound at its test size, so
+    engine='auto' must pick the vector engine (paper §6), and the
+    matrix-engine ceiling can never reach the paper's Eq. 23 bound."""
+    op = registry.get(name)
+    args, kw = _inputs(op)
+    advice = op.advice(*args, **kw)
+    assert advice.memory_bound, f"{name} unexpectedly compute-bound"
+    assert advice.engine == "vector"
+    assert advice.max_speedup_matrix >= 1.0
+    # and the auto path really runs the vector variant's numbers
+    auto = np.asarray(op(*args, engine="auto", **kw), np.float32)
+    vec = np.asarray(op(*args, engine="vector", **kw), np.float32)
+    np.testing.assert_array_equal(auto, vec)
+
+
+@pytest.mark.parametrize("alias,canonical", [
+    ("vpu", "vector"), ("vector", "vector"),
+    ("mxu", "matrix"), ("matrix", "matrix"), ("auto", None),
+])
+def test_normalize_engine(alias, canonical):
+    assert normalize_engine(alias) == canonical
+
+
+def test_normalize_engine_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown engine"):
+        normalize_engine("gpu")
+
+
+def test_advice_memoized_per_shape_dtype():
+    d = Dispatcher()
+    op = registry.get("scale")
+    b = jnp.ones(1024, jnp.float32)
+    d.advise(op, b, 2.0)
+    assert d.cache_info() == {"size": 1, "hits": 0, "misses": 1}
+    d.advise(op, b, 2.0)                      # same key: hit
+    assert d.cache_info()["hits"] == 1
+    d.advise(op, b.astype(jnp.bfloat16), 2.0)  # new dtype: miss
+    d.advise(op, jnp.ones(2048), 2.0)          # new shape: miss
+    assert d.cache_info() == {"size": 3, "hits": 1, "misses": 3}
+
+
+def test_advise_traits_memoized():
+    from repro.core.intensity import KernelTraits
+    d = Dispatcher()
+    t = KernelTraits("decode@32k", 1e12, 1e12)
+    a1 = d.advise_traits(t)
+    a2 = d.advise_traits(KernelTraits("decode@32k", 1e12, 1e12))
+    assert a1 is a2
+    assert d.cache_info()["hits"] == 1
+
+
+def test_default_cache_key_handles_unhashable_dataclasses():
+    """BlockEll holds jnp arrays (unhashable): the key must still build
+    and distinguish shapes from one another."""
+    op = registry.get("spmv")
+    (bell, x), _ = _inputs(op)
+    k1 = default_cache_key(bell, x)
+    k2 = default_cache_key(bell, x)
+    assert k1 == k2 and hash(k1) == hash(k2)
+    (bell2, x2), _ = _inputs(op, seed=1)
+    assert default_cache_key(bell2, x2) == k1  # same shapes, same key
+
+
+def test_stencil_advice_sees_temporal_blocking():
+    """Deep temporal blocking crosses the knee: the advisor must flip
+    from vector to matrix as I_t = t*|S|/D grows (paper Eq. 13/14)."""
+    op = registry.get("stencil")
+    (u, spec), kw = _inputs(op)
+    shallow = DEFAULT_DISPATCHER.advise(op, u, spec, steps=1,
+                                        block_rows=kw["block_rows"])
+    deep = DEFAULT_DISPATCHER.advise(op, u, spec, steps=64,
+                                     block_rows=kw["block_rows"])
+    assert shallow.memory_bound
+    assert not deep.memory_bound
+    assert deep.engine == "matrix"
+
+
+def test_registered_op_rejects_unknown_engine():
+    op = registry.get("triad")
+    args, kw = _inputs(op)
+    with pytest.raises(ValueError, match="unknown engine"):
+        op(*args, engine="tensor-core", **kw)
