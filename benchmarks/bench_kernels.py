@@ -20,7 +20,7 @@ import numpy as np
 from repro.core.dispatch import DEFAULT_DISPATCHER
 from repro.kernels import registry
 
-from .common import emit, time_fn, write_json
+from .common import bench_env, emit, time_fn, write_json
 
 
 def records_for(op) -> List[dict]:
@@ -34,7 +34,7 @@ def records_for(op) -> List[dict]:
             advice = DEFAULT_DISPATCHER.advise(op, *args, **kw)
             traits = op.traits(*args, **kw)
             want = np.asarray(op.reference(*args, **kw), np.float32)
-            us = time_fn(lambda: op.reference(*args, **kw))
+            t = time_fn(lambda: op.reference(*args, **kw))
             pred_us = traits.traffic_bytes / hw.mem_bw * 1e6
             for engine in sorted(op.engines):
                 got = np.asarray(op(*args, engine=engine, **kw), np.float32)
@@ -46,7 +46,9 @@ def records_for(op) -> List[dict]:
                     "dtype": dtype,
                     # one shared timing per (size, dtype): the oracle's
                     # XLA-CPU wall time, NOT the engine variant's
-                    "ref_us_per_call": round(us, 1),
+                    "ref_us_per_call": round(t.median_us, 1),
+                    "iqr_us": round(t.iqr_us, 1),
+                    "iters": t.iters,
                     "max_err": err,
                     "intensity": traits.intensity,
                     "memory_bound": advice.memory_bound,
@@ -66,7 +68,8 @@ def rows(names: Optional[Iterable[str]] = None,
             continue
         recs = records_for(op)
         if json_dir:
-            write_json(op.name, recs, json_dir)
+            env = bench_env(interpret=True, hw_model=DEFAULT_DISPATCHER.hw.name)
+            write_json(op.name, recs, json_dir, env=env)
         for r in recs:
             out.append({
                 "name": (f"{r['kernel']}/{r['engine']}/n={r['size']}/"

@@ -1,16 +1,50 @@
-"""Shared benchmark utilities: timing, CSV rows, JSON artifacts."""
+"""Shared benchmark utilities: timing, CSV rows, JSON artifacts.
+
+Record files written here are the input to the claims-report pipeline
+(``repro.report``): schema-versioned ``runs/BENCH_<kernel>.json`` with
+environment metadata, consumed by ``python -m benchmarks.run report``
+and the ``benchmarks/compare.py`` regression gate.
+"""
 from __future__ import annotations
 
+import csv
 import json
+import math
 import os
+import sys
 import time
-from typing import Callable, List
+from typing import Callable, List, NamedTuple, Optional, TextIO
 
 import jax
 
+#: Version of the BENCH_<kernel>.json file format.  Schema 1 was a bare
+#: list of records; schema 2 wraps the records with environment
+#: metadata (jax version, device kind, interpret flag, hardware model).
+SCHEMA_VERSION = 2
 
-def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall time in microseconds (XLA-CPU; relative signal only)."""
+
+class Timing(NamedTuple):
+    """One timing measurement: median + spread + sample count."""
+
+    median_us: float  # median wall time per call, microseconds
+    iqr_us: float     # interquartile range (q75 - q25), microseconds
+    iters: int        # timed iterations behind the statistics
+
+
+def _quantile(sorted_times: List[float], q: float) -> float:
+    """Linear-interpolated quantile of an ascending-sorted sample."""
+    idx = q * (len(sorted_times) - 1)
+    lo, hi = math.floor(idx), math.ceil(idx)
+    frac = idx - lo
+    return sorted_times[lo] * (1.0 - frac) + sorted_times[hi] * frac
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> Timing:
+    """Wall-time statistics in microseconds (XLA-CPU; relative signal only).
+
+    Returns median + IQR + iteration count so report consumers can see
+    measurement spread, not just a point estimate.
+    """
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []
@@ -19,25 +53,56 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
     times.sort()
-    return times[len(times) // 2] * 1e6
+    median = _quantile(times, 0.5) * 1e6
+    iqr = (_quantile(times, 0.75) - _quantile(times, 0.25)) * 1e6
+    return Timing(median_us=median, iqr_us=iqr, iters=iters)
 
 
-def emit(rows: List[dict]) -> None:
-    """Print ``name,us_per_call,derived`` CSV rows."""
+def emit(rows: List[dict], out: Optional[TextIO] = None) -> None:
+    """Write ``name,us_per_call,derived`` CSV rows (RFC-4180 quoted).
+
+    Fields containing commas, quotes, or newlines are quoted/escaped by
+    the ``csv`` module so derived fields can never corrupt the row
+    structure.
+    """
+    writer = csv.writer(out if out is not None else sys.stdout,
+                        lineterminator="\n")
     for r in rows:
-        print(f"{r['name']},{r.get('us_per_call', '')},{r.get('derived', '')}")
+        writer.writerow([r["name"], r.get("us_per_call", ""),
+                         r.get("derived", "")])
 
 
-def write_json(kernel: str, records: List[dict],
-               out_dir: str = "runs") -> str:
+def bench_env(interpret: bool = True, hw_model: str = "") -> dict:
+    """Environment metadata recorded alongside every schema-2 record set."""
+    import numpy
+
+    return {
+        "jax": jax.__version__,
+        "numpy": numpy.__version__,
+        "device": jax.devices()[0].platform,
+        "interpret": bool(interpret),
+        "hw_model": hw_model,
+    }
+
+
+def write_json(kernel: str, records: List[dict], out_dir: str = "runs",
+               env: Optional[dict] = None) -> str:
     """Write machine-readable per-kernel records to BENCH_<kernel>.json.
 
-    One record per (engine, size, dtype) sweep point so the perf
-    trajectory is diffable across PRs.
+    Schema 2: ``{"schema": 2, "kernel": ..., "env": {...}, "records":
+    [...]}`` with one record per (engine, size, dtype) sweep point so
+    the perf trajectory is diffable across PRs and auditable by the
+    ``repro.report`` claim checks.
     """
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"BENCH_{kernel}.json")
+    payload = {
+        "schema": SCHEMA_VERSION,
+        "kernel": kernel,
+        "env": env if env is not None else {},
+        "records": records,
+    }
     with open(path, "w") as f:
-        json.dump(records, f, indent=2, sort_keys=True)
+        json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")
     return path

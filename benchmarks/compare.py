@@ -1,0 +1,108 @@
+"""Regression gate: diff two BENCH record sets and fail on drift.
+
+Usage::
+
+    python -m benchmarks.compare BASELINE_DIR CANDIDATE_DIR \
+        [--threshold 0.25] [--kernels scale,triad]
+
+Compares candidate records against the baseline keyed by (kernel,
+engine, size, dtype) and exits non-zero when
+
+* a candidate's ``ref_us_per_call`` regresses by more than
+  ``--threshold`` (fraction; default 0.25 = 25%),
+* any candidate record violates a paper claim (Eq. 23/24 ceiling,
+  §6 routing, oracle accuracy, Eq. 4 boundedness), or
+* a baseline sweep point disappears from the candidate set (lost
+  coverage is a regression too).
+
+``--kernels`` restricts both sides to a comma-separated subset so CI
+can gate on a fast family sweep without re-running every kernel.
+Speed-ups and new sweep points are reported but never fail the gate.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.report import check_records, load_dir, violations
+from repro.report.records import BenchRecord, RecordSet
+
+Key = Tuple[str, str, int, str]
+
+
+def _index(recsets: Iterable[RecordSet],
+           kernels: Optional[set] = None) -> Dict[Key, BenchRecord]:
+    out: Dict[Key, BenchRecord] = {}
+    for rs in recsets:
+        if kernels is not None and rs.kernel not in kernels:
+            continue
+        for rec in rs.records:
+            out[rec.point] = rec
+    return out
+
+
+def compare(baseline_dir: str, candidate_dir: str, threshold: float = 0.25,
+            kernels: Optional[Iterable[str]] = None) -> List[str]:
+    """Return the list of failure messages (empty = gate passes)."""
+    wanted = set(kernels) if kernels is not None else None
+    base_sets = load_dir(baseline_dir)
+    cand_sets = [rs for rs in load_dir(candidate_dir)
+                 if wanted is None or rs.kernel in wanted]
+    base = _index(base_sets, wanted)
+    cand = _index(cand_sets, wanted)
+    failures: List[str] = []
+    if not base:
+        # an over-narrow --kernels filter must not pass vacuously
+        failures.append(
+            f"empty comparison: no baseline records in {baseline_dir!r} "
+            f"match kernels={sorted(wanted) if wanted else 'all'}")
+
+    for key in sorted(set(base) - set(cand)):
+        failures.append(f"missing: {'/'.join(map(str, key))} present in "
+                        f"baseline but absent from candidate")
+    for key in sorted(set(cand) - set(base)):
+        print(f"note: new sweep point {'/'.join(map(str, key))}")
+
+    for key in sorted(set(base) & set(cand)):
+        old, new = base[key].ref_us_per_call, cand[key].ref_us_per_call
+        if old > 0 and new > old * (1.0 + threshold):
+            failures.append(
+                f"perf regression: {'/'.join(map(str, key))} "
+                f"ref_us_per_call {old:.1f} -> {new:.1f} "
+                f"(+{(new / old - 1) * 100:.0f}% > {threshold * 100:.0f}%)")
+        elif old > 0 and new < old * (1.0 - threshold):
+            print(f"note: {'/'.join(map(str, key))} sped up "
+                  f"{old:.1f} -> {new:.1f} us")
+
+    for v in violations(check_records(cand_sets)):
+        failures.append(
+            f"claim violation: {'/'.join(map(str, v.record.point))} "
+            f"[{v.claim}] {v.detail}")
+    return failures
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("baseline", help="directory of baseline BENCH_*.json")
+    p.add_argument("candidate", help="directory of candidate BENCH_*.json")
+    p.add_argument("--threshold", type=float, default=0.25,
+                   help="max allowed ref_us_per_call regression fraction "
+                        "(default 0.25)")
+    p.add_argument("--kernels", default=None,
+                   help="comma-separated kernel subset to compare")
+    args = p.parse_args(argv)
+    kernels = args.kernels.split(",") if args.kernels else None
+    failures = compare(args.baseline, args.candidate,
+                       threshold=args.threshold, kernels=kernels)
+    for f in failures:
+        print(f"FAIL: {f}", file=sys.stderr)
+    if failures:
+        print(f"{len(failures)} gate failure(s)", file=sys.stderr)
+        return 1
+    print("gate passed: no perf regressions, no claim violations")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

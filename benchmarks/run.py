@@ -9,13 +9,16 @@ list to maintain.
   roofline       -- Fig. 2 (two-ceiling roofline placements)
   kernels        -- every registered kernel x engine x size x dtype
   <kernel name>  -- one registered kernel (e.g. ``scale``, ``triad``)
+  report         -- regenerate REPORT.md + docs/benchmarks/ from runs/
 
 Prints ``name,us_per_call,derived`` CSV rows; kernel sweeps also write
-``runs/BENCH_<kernel>.json``.
+``runs/BENCH_<kernel>.json`` (override the directory with ``--out DIR``
+to produce a candidate set for ``benchmarks/compare.py``).
 """
 from __future__ import annotations
 
 import sys
+from typing import List, Optional
 
 from repro.kernels import registry
 
@@ -28,21 +31,49 @@ THEORY = {
 }
 
 
-def main() -> None:
+def _report(argv: List[str]) -> None:
+    """`report` subcommand: runs/ records -> verified REPORT.md + pages."""
+    from repro.report import write_report
+
+    runs_dir = argv[0] if argv else "runs"
+    for path in write_report(runs_dir=runs_dir):
+        print(f"wrote {path}")
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    out_dir, out_given = "runs", "--out" in argv
+    if out_given:
+        i = argv.index("--out")
+        try:
+            out_dir = argv[i + 1]
+        except IndexError:
+            raise SystemExit("--out requires a directory argument")
+        del argv[i:i + 2]
+    if argv and argv[0] == "report":
+        # `report runs-ci` and `report --out runs-ci` both read runs-ci
+        if out_given and len(argv) > 1:
+            raise SystemExit("report: pass the records dir positionally "
+                             "or via --out, not both")
+        _report(argv[1:] or ([out_dir] if out_given else []))
+        return
     kernel_names = set(registry.names())
-    which = sys.argv[1:] or (sorted(THEORY) + ["kernels"])
+    which = argv or (sorted(THEORY) + ["kernels"])
+    if out_given and not any(k == "kernels" or k in kernel_names
+                             for k in which):
+        raise SystemExit("--out only applies to kernel sweeps or report")
     print("name,us_per_call,derived")
     for key in which:
         if key in THEORY:
             emit(THEORY[key].rows())
         elif key == "kernels":
-            emit(bench_kernels.rows())
+            emit(bench_kernels.rows(json_dir=out_dir))
         elif key in kernel_names:
-            emit(bench_kernels.rows([key]))
+            emit(bench_kernels.rows([key], json_dir=out_dir))
         else:
             raise SystemExit(
                 f"unknown benchmark {key!r}; have "
-                f"{sorted(THEORY) + ['kernels'] + sorted(kernel_names)}")
+                f"{sorted(THEORY) + ['kernels', 'report'] + sorted(kernel_names)}")
 
 
 if __name__ == "__main__":

@@ -45,7 +45,11 @@ _ENGINE_ALIASES = {
 
 
 def normalize_engine(engine: str) -> Optional[str]:
-    """'auto' -> None (advisor decides); 'mxu'/'vpu' aliases -> canonical."""
+    """'auto' -> None (advisor decides); 'mxu'/'vpu' aliases -> canonical.
+
+    The canonical names follow the paper's engine taxonomy (§2.1):
+    'matrix' (tensor core / MXU) and 'vector' (CUDA core / VPU).
+    """
     if engine == "auto":
         return None
     try:
@@ -85,11 +89,23 @@ def _probe(x: Any) -> Hashable:
 
 
 def default_cache_key(*args, **kwargs) -> Hashable:
+    """Shape/dtype cache key for Advice memoization.
+
+    Two calls share a key iff they share a roofline position (paper
+    §2.3): array values never move a kernel on the roofline, only
+    shapes, dtypes, and static parameters do.
+    """
     return (_probe(args), _probe(kwargs))
 
 
 class Dispatcher:
-    """Advisor-backed engine router with a memoized Advice cache."""
+    """Advisor-backed engine router with a memoized Advice cache.
+
+    Implements the paper's §6 takeaway as a runtime policy: classify by
+    intensity vs. machine balance (Eq. 1/2/4), send memory-bound work to
+    the vector engine, and memoize the resulting Advice so steady-state
+    dispatch is a dict hit.
+    """
 
     def __init__(self, advisor: Optional[EngineAdvisor] = None):
         self.advisor = advisor if advisor is not None else DEFAULT_ADVISOR
@@ -99,6 +115,7 @@ class Dispatcher:
 
     @property
     def hw(self):
+        """The advisor's HardwareSpec (paper Table 1 platform model)."""
         return self.advisor.hw
 
     # -- advice ------------------------------------------------------------
@@ -114,10 +131,11 @@ class Dispatcher:
         return advice
 
     def advise(self, op, *args, **kwargs) -> Advice:
-        """Memoized Advice for one registered op + call arguments.
+        """Memoized Advice (paper §6 decision) for one op + call arguments.
 
         The cache key is (kernel, hardware, shapes/dtypes/static params);
-        the op's ``KernelTraits`` factory only runs on a miss.
+        the op's ``KernelTraits`` factory (W flops, Q bytes per Eq. 2)
+        only runs on a miss.
         """
         key_fn = op.cache_key or default_cache_key
         key = (op.name, self.hw.name, key_fn(*args, **kwargs))
@@ -125,7 +143,11 @@ class Dispatcher:
             key, lambda: self.advisor.advise(op.traits(*args, **kwargs)))
 
     def advise_traits(self, traits: KernelTraits) -> Advice:
-        """Memoized Advice for hand-built traits (launch/analysis paths)."""
+        """Memoized Advice (paper §6) for hand-built Eq. 2 traits.
+
+        Used by the launch/analysis paths that know W and Q directly
+        instead of going through a registered op.
+        """
         key = (traits.name, self.hw.name, traits.work_flops,
                traits.traffic_bytes)
         return self._memoized(key, lambda: self.advisor.advise(traits))
@@ -133,7 +155,11 @@ class Dispatcher:
     # -- dispatch ----------------------------------------------------------
 
     def resolve(self, op, *args, engine: str = "auto", **kwargs) -> str:
-        """Resolve an engine flag to 'vector'|'matrix' for this call."""
+        """Resolve an engine flag to 'vector'|'matrix' for this call.
+
+        'auto' defers to the advisor (paper §6: memory-bound -> vector);
+        explicit flags are honored verbatim.
+        """
         forced = normalize_engine(engine)
         if forced is not None:
             return forced
@@ -141,7 +167,7 @@ class Dispatcher:
 
     def run(self, op, *args, engine: str = "auto", interpret: bool = True,
             **kwargs):
-        """Advisor-route and launch one registered op."""
+        """Advisor-route (paper §6) and launch one registered op."""
         eng = self.resolve(op, *args, engine=engine, **kwargs)
         fn = op.engines.get(eng)
         if fn is None:
@@ -151,10 +177,12 @@ class Dispatcher:
         return fn(*args, interpret=interpret, **kwargs)
 
     def cache_info(self) -> Dict[str, int]:
+        """Advice-cache statistics: {size, hits, misses}."""
         return {"size": len(self._cache), "hits": self._hits,
                 "misses": self._misses}
 
     def cache_clear(self) -> None:
+        """Drop all memoized Advice (e.g. after swapping hardware specs)."""
         self._cache.clear()
         self._hits = self._misses = 0
 
@@ -194,7 +222,9 @@ def elementwise_call(body: Callable, arrays: Sequence[jnp.ndarray],
                      block_rows: int = ELEMENTWISE_BLOCK_ROWS) -> jnp.ndarray:
     """Run an elementwise Pallas body over same-shape arrays of any shape.
 
-    ``body(*scalar_refs, *array_refs, o_ref)`` sees (block_rows, lanes)
+    The shared plumbing behind the paper's §3.1 elementwise suite
+    (SCALE, STREAM Triad, AXPY): ``body(*scalar_refs, *array_refs,
+    o_ref)`` sees (block_rows, lanes)
     tiles; this wrapper owns the flatten -> pad-to-tile -> reshape ->
     grid/block-spec construction -> unpad round trip that every
     elementwise kernel family previously duplicated.

@@ -30,7 +30,10 @@ __all__ = ["EngineOp", "all_ops", "discover", "get", "names", "register"]
 class EngineOp:
     """One kernel family: per-engine Pallas entry points + metadata.
 
-    engines map 'vector'/'matrix' to ``fn(*args, interpret=..., **kw)``;
+    The unit of the paper's §3 workload study: each family ships both a
+    vector-engine and a matrix-engine implementation so the §6 decision
+    framework has a real choice to make.  ``engines`` map
+    'vector'/'matrix' to ``fn(*args, interpret=..., **kw)``;
     ``traits``/``reference``/``make_inputs`` share the op's call
     signature so the dispatch layer, the generic benchmark driver, and
     the registry tests need no per-kernel knowledge.
@@ -50,10 +53,12 @@ class EngineOp:
 
     def __call__(self, *args, engine: str = "auto", interpret: bool = True,
                  **kwargs):
+        """Launch via the default dispatcher ('auto' = paper §6 routing)."""
         return DEFAULT_DISPATCHER.run(self, *args, engine=engine,
                                       interpret=interpret, **kwargs)
 
     def advice(self, *args, **kwargs):
+        """The memoized §6 Advice (engine, boundedness, Eq. 23/24 ceiling)."""
         return DEFAULT_DISPATCHER.advise(self, *args, **kwargs)
 
 
@@ -62,7 +67,12 @@ _DISCOVERED = False
 
 
 def register(op: EngineOp) -> EngineOp:
-    """Register (or re-register, e.g. on module reload) one kernel op."""
+    """Register (or re-register, e.g. on module reload) one kernel op.
+
+    Registration is the only wiring a new §3-style workload needs: the
+    benchmark sweep, the claims report, and 'auto' routing discover it
+    from here.
+    """
     _REGISTRY[op.name] = op
     return op
 
@@ -93,11 +103,13 @@ def discover() -> None:
 
 
 def names() -> Tuple[str, ...]:
+    """Sorted names of every registered kernel family (paper §3 suite)."""
     discover()
     return tuple(sorted(_REGISTRY))
 
 
 def get(name: str) -> EngineOp:
+    """Look up one registered kernel family by name (KeyError if absent)."""
     discover()
     try:
         return _REGISTRY[name]
@@ -108,5 +120,6 @@ def get(name: str) -> EngineOp:
 
 
 def all_ops() -> Tuple[EngineOp, ...]:
+    """Every registered op, name-sorted -- the benchmark/report sweep set."""
     discover()
     return tuple(_REGISTRY[k] for k in sorted(_REGISTRY))

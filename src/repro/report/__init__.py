@@ -1,0 +1,29 @@
+"""Claims-report pipeline: BENCH records → verified, published evidence.
+
+The paper's contribution is an argument — a theoretical ceiling
+(Eq. 23/24: ≤1.33x for FP64 tensor cores, ~1.0x on our TPU model)
+validated by measurements.  This package closes the loop the raw
+``runs/BENCH_*.json`` files leave open:
+
+1. :mod:`repro.report.records` ingests every benchmark record file
+   (schema 1 legacy lists and schema 2 env-annotated sets),
+2. :mod:`repro.report.claims` joins each record back to the analytic
+   layer and verifies the paper's claims (Eq. 4 boundedness, the
+   Eq. 17/23/24 ceiling, §6 engine routing, oracle accuracy),
+3. :mod:`repro.report.render` publishes a deterministic ``REPORT.md``
+   plus per-kernel pages under ``docs/benchmarks/``.
+
+Entry point: ``python -m benchmarks.run report`` (CI regenerates and
+diffs the output; ``benchmarks/compare.py`` gates regressions).
+"""
+from .claims import (CLAIMS, TOLERANCE, ClaimResult, ceiling_bound,
+                     check_record, check_records, hw_for, violations)
+from .records import BenchRecord, RecordSet, load_dir, load_file
+from .render import render_kernel_page, render_report, write_report
+
+__all__ = [
+    "CLAIMS", "TOLERANCE", "BenchRecord", "ClaimResult", "RecordSet",
+    "ceiling_bound", "check_record", "check_records", "hw_for",
+    "load_dir", "load_file", "render_kernel_page", "render_report",
+    "violations", "write_report",
+]

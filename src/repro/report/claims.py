@@ -1,0 +1,140 @@
+"""Per-record claim verification: measurements vs. the paper's theory.
+
+Joins every :class:`~repro.report.records.BenchRecord` back to the
+analytic layer (``repro.core.advisor`` / ``bounds`` / ``balance``) and
+checks the paper's claims record by record:
+
+* **ceiling** (Eq. 23/24) -- the recorded matrix-engine speedup ceiling
+  never exceeds min(2 - 2/(1+alpha), 1 + I/B), and never drops below
+  the fully-overlapped floor of 1.0 (Eq. 17).
+* **routing** (§6) -- memory-bound records route ``engine='auto'`` to
+  the vector engine; compute-bound records to the matrix engine.
+* **accuracy** (§5 methodology) -- both engine variants reproduce the
+  oracle within a per-dtype tolerance: same result through the same
+  memory path.
+* **boundedness** (Eq. 4) -- the recorded memory-bound flag matches a
+  fresh I < B_vector derivation from the recorded intensity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+from ..core.advisor import EngineAdvisor
+from ..core.balance import machine_balance
+from ..core.bounds import tensor_core_upper_bound, workload_upper_bound
+from ..core.hw import PLATFORMS, TPU_V5E, HardwareSpec
+from ..core.intensity import KernelTraits
+from .records import BenchRecord, RecordSet
+
+__all__ = ["CLAIMS", "ClaimResult", "TOLERANCE", "ceiling_bound",
+           "check_record", "check_records", "hw_for", "violations"]
+
+#: Claim identifiers, in report order.
+CLAIMS = ("ceiling", "routing", "accuracy", "boundedness")
+
+#: Max abs error allowed between an engine variant and its oracle.
+#: bfloat16 has an 8-bit mantissa, so elementwise results on O(10)
+#: magnitudes legitimately differ by ~2^-4.
+TOLERANCE: Dict[str, float] = {"float32": 1e-4, "bfloat16": 0.125}
+
+_EPS = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class ClaimResult:
+    """Outcome of one claim check against one benchmark record."""
+
+    claim: str           # one of CLAIMS
+    record: BenchRecord
+    passed: bool
+    detail: str          # human-readable evidence string
+
+
+def hw_for(recset: RecordSet,
+           default: HardwareSpec = TPU_V5E) -> HardwareSpec:
+    """Resolve a record set's ``env.hw_model`` to a HardwareSpec.
+
+    Falls back to the TPU v5e model (paper Table 1 extended) when the
+    record set predates schema 2 or names an unknown platform.
+    """
+    name = str(recset.env.get("hw_model", ""))
+    for hw in PLATFORMS.values():
+        if hw.name == name:
+            return hw
+    return default
+
+
+def ceiling_bound(intensity: float, hw: HardwareSpec) -> float:
+    """The paper's composite matrix-engine ceiling for one kernel.
+
+    min(Eq. 23: 2 - 2/(1+alpha), Eq. 24: 1 + I/B_vector) -- the
+    tightest bound any memory-bound record may report.
+    """
+    b_vec = machine_balance(hw, "vector")
+    return min(tensor_core_upper_bound(hw.alpha),
+               workload_upper_bound(intensity, b_vec))
+
+
+def check_record(rec: BenchRecord,
+                 hw: HardwareSpec = TPU_V5E) -> Tuple[ClaimResult, ...]:
+    """Verify all four paper claims (Eq. 4, Eq. 17/23/24, §6) for one record.
+
+    Returns one :class:`ClaimResult` per entry in :data:`CLAIMS`, in
+    order, re-deriving the advisor's decision from the recorded
+    intensity so a stale or hand-edited record cannot pass silently.
+    """
+    advice = EngineAdvisor(hw).advise(
+        KernelTraits(rec.kernel, rec.intensity, 1.0))
+    results = []
+
+    bound = ceiling_bound(rec.intensity, hw)
+    if rec.memory_bound:
+        ceiling_ok = 1.0 - _EPS <= rec.mxu_ceiling <= bound + _EPS
+        ceiling_detail = (f"recorded ceiling {rec.mxu_ceiling:.4g}x vs "
+                          f"Eq. 23/24 bound {bound:.4g}x")
+    else:
+        # Compute-bound records escape Eq. 23/24; the ceiling may reach
+        # the full engine ratio alpha but no further.
+        ceiling_ok = 1.0 - _EPS <= rec.mxu_ceiling <= hw.alpha + _EPS
+        ceiling_detail = (f"compute-bound: ceiling {rec.mxu_ceiling:.4g}x "
+                          f"vs alpha {hw.alpha:.4g}")
+    results.append(ClaimResult("ceiling", rec, ceiling_ok, ceiling_detail))
+
+    routing_ok = rec.engine_auto == advice.engine and (
+        not rec.memory_bound or rec.engine_auto == "vector")
+    results.append(ClaimResult(
+        "routing", rec, routing_ok,
+        f"auto={rec.engine_auto} vs advisor={advice.engine} "
+        f"(memory_bound={rec.memory_bound})"))
+
+    tol = TOLERANCE.get(rec.dtype, TOLERANCE["float32"])
+    results.append(ClaimResult(
+        "accuracy", rec, rec.max_err <= tol,
+        f"max_err {rec.max_err:.3g} vs {rec.dtype} tolerance {tol:g}"))
+
+    results.append(ClaimResult(
+        "boundedness", rec, rec.memory_bound == advice.memory_bound,
+        f"recorded memory_bound={rec.memory_bound} vs derived "
+        f"I={rec.intensity:.4g} < B_vec={machine_balance(hw, 'vector'):.4g} "
+        f"-> {advice.memory_bound}"))
+    return tuple(results)
+
+
+def check_records(recsets: Sequence[RecordSet]) -> List[ClaimResult]:
+    """Run :func:`check_record` over every record of every set.
+
+    The hardware model is resolved per record set from its environment
+    metadata, so mixed-platform runs/ directories verify correctly.
+    """
+    out: List[ClaimResult] = []
+    for rs in recsets:
+        hw = hw_for(rs)
+        for rec in rs.records:
+            out.extend(check_record(rec, hw))
+    return out
+
+
+def violations(results: Iterable[ClaimResult]) -> List[ClaimResult]:
+    """The failing subset of *results* -- empty iff the paper's story holds."""
+    return [r for r in results if not r.passed]

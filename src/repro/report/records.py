@@ -1,0 +1,143 @@
+"""Benchmark record ingestion for the claims report (paper §5 evidence).
+
+Loads every ``runs/BENCH_<kernel>.json`` produced by the benchmark
+harness into typed :class:`BenchRecord` rows.  Two file schemas are
+accepted:
+
+* schema 1 (legacy) -- a bare JSON list of record dicts,
+* schema 2 -- ``{"schema": 2, "kernel": ..., "env": {...},
+  "records": [...]}`` with environment metadata (jax version, device
+  kind, interpret flag, hardware model).
+
+Each record is one (kernel, engine, size, dtype) sweep point carrying
+the measured reference time, the max error vs. the oracle, and the
+analytic fields (intensity per Eq. 2, boundedness per Eq. 4, the
+matrix-engine ceiling per Eq. 23/24) that ``repro.report.claims``
+re-derives and verifies.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+from typing import Any, Mapping, Optional, Tuple
+
+__all__ = ["BenchRecord", "RecordSet", "load_dir", "load_file"]
+
+_REQUIRED = ("kernel", "engine", "size", "dtype", "ref_us_per_call",
+             "max_err", "intensity", "memory_bound", "engine_auto",
+             "mxu_ceiling")
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchRecord:
+    """One benchmark sweep point: measurement + analytic join fields.
+
+    Mirrors the per-record dict written by ``benchmarks.bench_kernels``:
+    ``intensity`` is Eq. 2's I = W/Q, ``memory_bound`` is the Eq. 4 test
+    against the vector-engine machine balance, and ``mxu_ceiling`` is the
+    advisor's tightest matrix-engine speedup bound (Eq. 17/23/24).
+    """
+
+    kernel: str
+    engine: str               # which Pallas variant was checked
+    size: int
+    dtype: str
+    ref_us_per_call: float    # median oracle wall time (XLA-CPU signal)
+    max_err: float            # |engine variant - oracle| max abs error
+    intensity: float          # Eq. 2: I = W / Q
+    memory_bound: bool        # Eq. 4: I < B_vector
+    engine_auto: str          # what engine='auto' resolved to
+    mxu_ceiling: float        # advisor's matrix-engine speedup ceiling
+    pred_us_v5e: Optional[float] = None  # Q / mem_bw analytic floor
+    iqr_us: Optional[float] = None       # timing spread (schema 2)
+    iters: Optional[int] = None          # timing iterations (schema 2)
+
+    @property
+    def point(self) -> Tuple[str, str, int, str]:
+        """The sweep-point key (kernel, engine, size, dtype)."""
+        return (self.kernel, self.engine, self.size, self.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecordSet:
+    """All records of one ``BENCH_<kernel>.json`` file plus metadata."""
+
+    kernel: str
+    schema: int
+    env: Mapping[str, Any]
+    records: Tuple[BenchRecord, ...]
+    path: str
+
+
+def _to_record(raw: Mapping[str, Any], path: str) -> BenchRecord:
+    missing = [k for k in _REQUIRED if k not in raw]
+    if missing:
+        raise ValueError(f"{path}: record missing fields {missing}; "
+                         f"got {sorted(raw)}")
+    return BenchRecord(
+        kernel=str(raw["kernel"]),
+        engine=str(raw["engine"]),
+        size=int(raw["size"]),
+        dtype=str(raw["dtype"]),
+        ref_us_per_call=float(raw["ref_us_per_call"]),
+        max_err=float(raw["max_err"]),
+        intensity=float(raw["intensity"]),
+        memory_bound=bool(raw["memory_bound"]),
+        engine_auto=str(raw["engine_auto"]),
+        mxu_ceiling=float(raw["mxu_ceiling"]),
+        pred_us_v5e=(float(raw["pred_us_v5e"])
+                     if raw.get("pred_us_v5e") is not None else None),
+        iqr_us=(float(raw["iqr_us"])
+                if raw.get("iqr_us") is not None else None),
+        iters=(int(raw["iters"])
+               if raw.get("iters") is not None else None),
+    )
+
+
+def load_file(path: str) -> RecordSet:
+    """Parse one BENCH_<kernel>.json (schema 1 or 2) into a RecordSet.
+
+    Raises ``ValueError`` on unknown schema versions or records missing
+    the fields the claim checks (Eq. 23/24 ceiling, §6 routing) need.
+    """
+    with open(path) as f:
+        payload = json.load(f)
+    if isinstance(payload, list):          # schema 1: bare record list
+        schema, env, raw_records = 1, {}, payload
+    elif isinstance(payload, dict):
+        schema = int(payload.get("schema", 0))
+        if schema != 2:
+            raise ValueError(f"{path}: unsupported schema {schema!r} "
+                             f"(expected 1-list or 2)")
+        env = dict(payload.get("env", {}))
+        raw_records = payload.get("records")
+        if not isinstance(raw_records, list):
+            raise ValueError(f"{path}: schema-2 payload missing its "
+                             f"'records' list")
+    else:
+        raise ValueError(f"{path}: expected a list or object, "
+                         f"got {type(payload).__name__}")
+    records = tuple(_to_record(r, path) for r in raw_records)
+    if not records:
+        raise ValueError(f"{path}: no records")
+    kernels = sorted({r.kernel for r in records})
+    if len(kernels) != 1:
+        raise ValueError(f"{path}: mixed kernels {kernels} in one file")
+    return RecordSet(kernel=kernels[0], schema=schema, env=env,
+                     records=records, path=path)
+
+
+def load_dir(runs_dir: str = "runs") -> Tuple[RecordSet, ...]:
+    """Load every ``BENCH_*.json`` under *runs_dir*, sorted by kernel.
+
+    This is the measurement half of the paper's measure-vs-theory loop;
+    the returned sets feed ``repro.report.claims.check_records``.
+    """
+    paths = sorted(glob.glob(os.path.join(runs_dir, "BENCH_*.json")))
+    if not paths:
+        raise FileNotFoundError(f"no BENCH_*.json files under {runs_dir!r}")
+    sets = tuple(sorted((load_file(p) for p in paths),
+                        key=lambda s: s.kernel))
+    return sets

@@ -1,0 +1,61 @@
+"""Benchmark-utility tests: CSV escaping in emit (derived fields with
+commas must survive a csv round trip), time_fn's median/IQR statistics,
+and the schema-2 write_json wrapper."""
+import csv
+import io
+import json
+
+import numpy as np
+
+from benchmarks.common import (SCHEMA_VERSION, Timing, bench_env, emit,
+                               time_fn, write_json)
+
+
+def test_emit_plain_rows_unquoted():
+    buf = io.StringIO()
+    emit([{"name": "scale/vector", "us_per_call": "1.5",
+           "derived": "I=0.125"}], out=buf)
+    assert buf.getvalue() == "scale/vector,1.5,I=0.125\n"
+
+
+def test_emit_escapes_commas_and_quotes():
+    rows = [
+        {"name": "k/v", "us_per_call": "2.0",
+         "derived": "pred=1,2 and note=\"q\""},
+        {"name": "with,comma", "us_per_call": "", "derived": "a\nb"},
+    ]
+    buf = io.StringIO()
+    emit(rows, out=buf)
+    parsed = list(csv.reader(io.StringIO(buf.getvalue())))
+    assert parsed == [
+        ["k/v", "2.0", "pred=1,2 and note=\"q\""],
+        ["with,comma", "", "a\nb"],
+    ]
+
+
+def test_emit_defaults_missing_fields_to_empty():
+    buf = io.StringIO()
+    emit([{"name": "only-name"}], out=buf)
+    assert buf.getvalue() == "only-name,,\n"
+
+
+def test_time_fn_returns_median_iqr_iters():
+    t = time_fn(lambda: np.arange(16), iters=7, warmup=1)
+    assert isinstance(t, Timing)
+    assert t.median_us > 0
+    assert t.iqr_us >= 0
+    assert t.iters == 7
+
+
+def test_write_json_schema2(tmp_path):
+    recs = [{"kernel": "demo", "engine": "vector", "size": 8,
+             "dtype": "float32", "ref_us_per_call": 1.0}]
+    env = bench_env(interpret=True, hw_model="TPU-v5e")
+    path = write_json("demo", recs, out_dir=str(tmp_path), env=env)
+    payload = json.loads(open(path).read())
+    assert payload["schema"] == SCHEMA_VERSION
+    assert payload["kernel"] == "demo"
+    assert payload["records"] == recs
+    for key in ("jax", "numpy", "device", "interpret", "hw_model"):
+        assert key in payload["env"]
+    assert payload["env"]["hw_model"] == "TPU-v5e"

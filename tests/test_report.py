@@ -1,0 +1,220 @@
+"""Claims-report pipeline tests: record ingestion (schema 1 + 2), the
+per-record claim checks (Eq. 4/17/23/24, §6 routing, oracle accuracy),
+deterministic rendering, and the compare regression gate -- including
+the acceptance bar that the committed runs/ records carry zero Eq. 23/24
+ceiling violations."""
+import json
+import os
+import pathlib
+
+import pytest
+
+from repro.core.balance import machine_balance
+from repro.core.bounds import tensor_core_upper_bound, workload_upper_bound
+from repro.core.hw import TPU_V5E
+from repro.report import (CLAIMS, ceiling_bound, check_record,
+                          check_records, load_dir, load_file,
+                          render_kernel_page, render_report, violations,
+                          write_report)
+from repro.report.records import BenchRecord
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+RUNS = REPO / "runs"
+
+
+def _raw(**overrides):
+    """A schema-2 record dict for a healthy memory-bound sweep point."""
+    rec = {
+        "kernel": "scale", "engine": "vector", "size": 1024,
+        "dtype": "float32", "ref_us_per_call": 100.0, "iqr_us": 5.0,
+        "iters": 5, "max_err": 0.0, "intensity": 0.125,
+        "memory_bound": True, "engine_auto": "vector",
+        "pred_us_v5e": 1.0, "mxu_ceiling": 1.0,
+    }
+    rec.update(overrides)
+    return rec
+
+
+def _write_set(path, records, schema=2, kernel="scale"):
+    payload = {"schema": schema, "kernel": kernel,
+               "env": {"jax": "0", "device": "cpu", "interpret": True,
+                       "hw_model": "TPU-v5e"},
+               "records": records}
+    path.write_text(json.dumps(payload if schema == 2 else records))
+
+
+# -- ingestion --------------------------------------------------------------
+
+def test_load_committed_runs_schema2():
+    sets = load_dir(str(RUNS))
+    assert [s.kernel for s in sets] == sorted(s.kernel for s in sets)
+    assert {s.kernel for s in sets} >= {"attention", "axpy", "scale",
+                                        "spmv", "stencil", "triad"}
+    for s in sets:
+        assert s.schema == 2
+        assert "jax" in s.env and "device" in s.env
+        assert s.env["interpret"] is True
+        for rec in s.records:
+            assert rec.iters and rec.iqr_us is not None
+
+
+def test_load_schema1_legacy_list(tmp_path):
+    p = tmp_path / "BENCH_scale.json"
+    _write_set(p, [_raw()], schema=1)
+    rs = load_file(str(p))
+    assert rs.schema == 1 and rs.env == {} and len(rs.records) == 1
+    assert rs.records[0].point == ("scale", "vector", 1024, "float32")
+
+
+def test_load_rejects_missing_fields_and_bad_schema(tmp_path):
+    p = tmp_path / "BENCH_scale.json"
+    bad = _raw()
+    del bad["mxu_ceiling"]
+    _write_set(p, [bad], schema=1)
+    with pytest.raises(ValueError, match="missing fields"):
+        load_file(str(p))
+    p.write_text(json.dumps({"schema": 99, "records": [_raw()]}))
+    with pytest.raises(ValueError, match="unsupported schema"):
+        load_file(str(p))
+    p.write_text(json.dumps({"schema": 2, "env": {}}))
+    with pytest.raises(ValueError, match="missing its 'records'"):
+        load_file(str(p))
+    with pytest.raises(FileNotFoundError):
+        load_dir(str(tmp_path / "nowhere"))
+
+
+# -- claim checks -----------------------------------------------------------
+
+def test_committed_runs_have_zero_violations():
+    """The acceptance bar: every committed record passes every claim --
+    in particular zero Eq. 23/24 ceiling violations across all six
+    kernel families."""
+    results = check_records(load_dir(str(RUNS)))
+    assert results, "no claim results produced"
+    assert violations(results) == []
+
+
+def test_ceiling_bound_matches_paper_formulas():
+    b = machine_balance(TPU_V5E, "vector")
+    i = 0.125
+    assert ceiling_bound(i, TPU_V5E) == pytest.approx(
+        min(tensor_core_upper_bound(TPU_V5E.alpha),
+            workload_upper_bound(i, b)))
+
+
+def _record(**overrides):
+    d = _raw()
+    d.update(overrides)
+    return BenchRecord(**{k: d[k] for k in d})
+
+
+def test_healthy_record_passes_all_claims():
+    results = check_record(_record(), TPU_V5E)
+    assert tuple(r.claim for r in results) == CLAIMS
+    assert all(r.passed for r in results)
+
+
+@pytest.mark.parametrize("overrides,failing", [
+    # memory-bound record claiming a 1.9x MXU win: Eq. 23/24 busted
+    ({"mxu_ceiling": 1.9}, "ceiling"),
+    # memory-bound work auto-routed to the matrix engine: §6 busted
+    ({"engine_auto": "matrix"}, "routing"),
+    # engine variant diverged from the oracle
+    ({"max_err": 0.5}, "accuracy"),
+    # record disagrees with a fresh Eq. 4 derivation
+    ({"memory_bound": False, "engine_auto": "matrix",
+      "mxu_ceiling": 2.0}, "boundedness"),
+])
+def test_claim_violations_detected(overrides, failing):
+    results = check_record(_record(**overrides), TPU_V5E)
+    failed = {r.claim for r in results if not r.passed}
+    assert failing in failed
+
+
+def test_bf16_tolerance_is_looser():
+    rec = _record(dtype="bfloat16", max_err=0.0625, intensity=0.25)
+    assert all(r.passed for r in check_record(rec, TPU_V5E))
+    rec32 = _record(dtype="float32", max_err=0.0625)
+    assert not [r for r in check_record(rec32, TPU_V5E)
+                if r.claim == "accuracy"][0].passed
+
+
+# -- rendering --------------------------------------------------------------
+
+def test_write_report_deterministic(tmp_path):
+    """Two regenerations from the same records are byte-identical."""
+    out1, out2 = tmp_path / "a", tmp_path / "b"
+    for out in (out1, out2):
+        paths = write_report(runs_dir=str(RUNS),
+                             report_path=str(out / "REPORT.md"),
+                             docs_dir=str(out / "docs"))
+        assert len(paths) >= 7  # REPORT.md + one page per family
+    assert (out1 / "REPORT.md").read_bytes() == \
+        (out2 / "REPORT.md").read_bytes()
+    for page in sorted(p.name for p in (out1 / "docs").iterdir()):
+        assert (out1 / "docs" / page).read_bytes() == \
+            (out2 / "docs" / page).read_bytes()
+
+
+def test_write_report_removes_orphan_pages(tmp_path):
+    """Pages of removed kernels are deleted so docs/ matches runs/."""
+    runs, docs = tmp_path / "runs", tmp_path / "docs"
+    runs.mkdir(), docs.mkdir()
+    _write_set(runs / "BENCH_scale.json", [_raw()])
+    (docs / "removed-kernel.md").write_text("stale evidence")
+    write_report(runs_dir=str(runs),
+                 report_path=str(tmp_path / "REPORT.md"),
+                 docs_dir=str(docs))
+    assert not (docs / "removed-kernel.md").exists()
+    assert (docs / "scale.md").exists()
+
+
+def test_committed_report_is_current():
+    """REPORT.md and docs/benchmarks/ match the committed runs/ records
+    (i.e. `python -m benchmarks.run report` was run before commit)."""
+    recsets = load_dir(str(RUNS))
+    assert (REPO / "REPORT.md").read_text() == render_report(recsets)
+    for rs in recsets:
+        page = REPO / "docs" / "benchmarks" / f"{rs.kernel}.md"
+        assert page.read_text() == render_kernel_page(rs), page
+
+
+def test_report_flags_violations(tmp_path):
+    runs = tmp_path / "runs"
+    runs.mkdir()
+    _write_set(runs / "BENCH_scale.json",
+               [_raw(), _raw(engine="matrix", mxu_ceiling=1.9)])
+    recsets = load_dir(str(runs))
+    report = render_report(recsets)
+    assert "❌" in report and "violation" in report
+    page = render_kernel_page(recsets[0])
+    assert "## Violations" in page and "ceiling" in page
+
+
+# -- compare gate -----------------------------------------------------------
+
+def test_compare_gate(tmp_path):
+    from benchmarks.compare import compare
+
+    base, cand = tmp_path / "base", tmp_path / "cand"
+    base.mkdir(), cand.mkdir()
+    _write_set(base / "BENCH_scale.json",
+               [_raw(), _raw(engine="matrix")])
+    # identical candidate: clean pass
+    _write_set(cand / "BENCH_scale.json",
+               [_raw(), _raw(engine="matrix")])
+    assert compare(str(base), str(cand)) == []
+    # >25% slower + a dropped sweep point + a claim violation: all caught
+    _write_set(cand / "BENCH_scale.json",
+               [_raw(ref_us_per_call=200.0, mxu_ceiling=1.9)])
+    msgs = "\n".join(compare(str(base), str(cand)))
+    assert "perf regression" in msgs
+    assert "missing" in msgs
+    assert "claim violation" in msgs
+    # a generous threshold forgives the slowdown but not the violation
+    msgs = "\n".join(compare(str(base), str(cand), threshold=2.0))
+    assert "perf regression" not in msgs
+    assert "claim violation" in msgs
+    # a filter matching nothing must fail, not pass vacuously
+    msgs = "\n".join(compare(str(base), str(cand), kernels=["triad"]))
+    assert "empty comparison" in msgs
