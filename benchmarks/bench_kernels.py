@@ -23,6 +23,25 @@ from repro.kernels import registry
 from .common import bench_env, emit, time_fn, write_json
 
 
+def _tile_config_field(op, engine: str, dtype: str) -> Optional[dict]:
+    """The tuned-tile evidence for one sweep point, or None (defaults).
+
+    Carries the tuner's own measurements (``tuned_us`` vs
+    ``default_us``) alongside the params so the claims report can
+    render tuned-vs-default deltas without re-timing anything.
+    """
+    entry = DEFAULT_DISPATCHER.tuning.lookup(
+        op.name, engine, dtype, DEFAULT_DISPATCHER.hw.name)
+    if entry is None:
+        return None
+    return {
+        "params": {k: int(v) for k, v in sorted(entry.params.items())},
+        "tuned_us": round(entry.best_us, 1),
+        "default_us": round(entry.default_us, 1),
+        "source": entry.source,
+    }
+
+
 def records_for(op) -> List[dict]:
     """One record per (engine, size, dtype) for a registered kernel."""
     rng = np.random.default_rng(0)
@@ -37,6 +56,8 @@ def records_for(op) -> List[dict]:
             t = time_fn(lambda: op.reference(*args, **kw))
             pred_us = traits.traffic_bytes / hw.mem_bw * 1e6
             for engine in sorted(op.engines):
+                # runs with the tuned tile config when one is cached --
+                # the correctness check covers the tiles we'd deploy
                 got = np.asarray(op(*args, engine=engine, **kw), np.float32)
                 err = float(np.max(np.abs(got - want)))
                 recs.append({
@@ -55,12 +76,18 @@ def records_for(op) -> List[dict]:
                     "engine_auto": advice.engine,
                     "pred_us_v5e": round(pred_us, 3),
                     "mxu_ceiling": advice.max_speedup_matrix,
+                    "tile_config": _tile_config_field(op, engine, dtype),
                 })
     return recs
 
 
 def rows(names: Optional[Iterable[str]] = None,
-         json_dir: Optional[str] = "runs") -> List[dict]:
+         json_dir: Optional[str] = "runs",
+         tuned: Optional[str] = None) -> List[dict]:
+    if tuned is not None:
+        # sweep with tuned tile configs: dispatch consults the cache
+        # for every launch and each record says which tiles it used
+        DEFAULT_DISPATCHER.load_tuned(tuned)
     wanted = set(names) if names is not None else None
     out = []
     for op in registry.all_ops():
@@ -71,6 +98,9 @@ def rows(names: Optional[Iterable[str]] = None,
             env = bench_env(interpret=True, hw_model=DEFAULT_DISPATCHER.hw.name)
             write_json(op.name, recs, json_dir, env=env)
         for r in recs:
+            cfg = r.get("tile_config")
+            tiles = "" if not cfg else ";tiles=" + ",".join(
+                f"{k}={v}" for k, v in sorted(cfg["params"].items()))
             out.append({
                 "name": (f"{r['kernel']}/{r['engine']}/n={r['size']}/"
                          f"{r['dtype']}"),
@@ -79,7 +109,7 @@ def rows(names: Optional[Iterable[str]] = None,
                             f"I={r['intensity']:.4f};"
                             f"auto={r['engine_auto']};"
                             f"mxu_ceiling={r['mxu_ceiling']:.4f}x;"
-                            f"err={r['max_err']:.2e}"),
+                            f"err={r['max_err']:.2e}" + tiles),
             })
     return out
 

@@ -9,53 +9,27 @@ from __future__ import annotations
 
 import csv
 import json
-import math
 import os
 import sys
-import time
-from typing import Callable, List, NamedTuple, Optional, TextIO
+from typing import List, Optional, TextIO
 
 import jax
 
+# canonical implementation lives in the library so the autotuner and
+# the harness can never drift apart; re-exported here for all existing
+# benchmark/test consumers
+from repro.core.timing import Timing, time_fn
+
+__all__ = ["SCHEMA_VERSION", "Timing", "bench_env", "emit", "time_fn",
+           "write_json"]
+
 #: Version of the BENCH_<kernel>.json file format.  Schema 1 was a bare
 #: list of records; schema 2 wraps the records with environment
-#: metadata (jax version, device kind, interpret flag, hardware model).
-SCHEMA_VERSION = 2
-
-
-class Timing(NamedTuple):
-    """One timing measurement: median + spread + sample count."""
-
-    median_us: float  # median wall time per call, microseconds
-    iqr_us: float     # interquartile range (q75 - q25), microseconds
-    iters: int        # timed iterations behind the statistics
-
-
-def _quantile(sorted_times: List[float], q: float) -> float:
-    """Linear-interpolated quantile of an ascending-sorted sample."""
-    idx = q * (len(sorted_times) - 1)
-    lo, hi = math.floor(idx), math.ceil(idx)
-    frac = idx - lo
-    return sorted_times[lo] * (1.0 - frac) + sorted_times[hi] * frac
-
-
-def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> Timing:
-    """Wall-time statistics in microseconds (XLA-CPU; relative signal only).
-
-    Returns median + IQR + iteration count so report consumers can see
-    measurement spread, not just a point estimate.
-    """
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    median = _quantile(times, 0.5) * 1e6
-    iqr = (_quantile(times, 0.75) - _quantile(times, 0.25)) * 1e6
-    return Timing(median_us=median, iqr_us=iqr, iters=iters)
+#: metadata (jax version, device kind, interpret flag, hardware model);
+#: schema 3 adds a per-record ``tile_config`` field (the tuned tile
+#: params the launch used plus the tuner's tuned-vs-default timings,
+#: or null when dispatch fell back to static defaults).
+SCHEMA_VERSION = 3
 
 
 def emit(rows: List[dict], out: Optional[TextIO] = None) -> None:
@@ -89,10 +63,11 @@ def write_json(kernel: str, records: List[dict], out_dir: str = "runs",
                env: Optional[dict] = None) -> str:
     """Write machine-readable per-kernel records to BENCH_<kernel>.json.
 
-    Schema 2: ``{"schema": 2, "kernel": ..., "env": {...}, "records":
-    [...]}`` with one record per (engine, size, dtype) sweep point so
-    the perf trajectory is diffable across PRs and auditable by the
-    ``repro.report`` claim checks.
+    Schema 3: ``{"schema": 3, "kernel": ..., "env": {...}, "records":
+    [...]}`` with one record per (engine, size, dtype) sweep point
+    (including its ``tile_config``, if tuned) so the perf trajectory is
+    diffable across PRs and auditable by the ``repro.report`` claim
+    checks.
     """
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"BENCH_{kernel}.json")

@@ -18,10 +18,16 @@ engine, size, dtype) and exits non-zero when
 ``--kernels`` restricts both sides to a comma-separated subset so CI
 can gate on a fast family sweep without re-running every kernel.
 Speed-ups and new sweep points are reported but never fail the gate.
+
+On failure the log ends with a per-kernel summary table (compared
+points, missing points, perf regressions, claim violations, status) so
+a red CI run is diagnosable from its last screenful instead of from
+the first violation alone.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import sys
 from typing import Dict, Iterable, List, Optional, Tuple
 
@@ -29,6 +35,50 @@ from repro.report import check_records, load_dir, violations
 from repro.report.records import BenchRecord, RecordSet
 
 Key = Tuple[str, str, int, str]
+
+
+@dataclasses.dataclass(frozen=True)
+class Failure:
+    """One gate failure: its kind, the kernel it belongs to, the text."""
+
+    kind: str      # 'empty' | 'missing' | 'perf' | 'claim'
+    kernel: str    # '' for cross-kernel failures (empty comparison)
+    message: str
+
+
+@dataclasses.dataclass(frozen=True)
+class GateResult:
+    """Everything ``main`` needs to render an actionable red log."""
+
+    failures: Tuple[Failure, ...]
+    compared: Dict[str, int]     # kernel -> sweep points compared
+
+    @property
+    def messages(self) -> List[str]:
+        """The failure texts (the classic ``compare`` return value)."""
+        return [f.message for f in self.failures]
+
+    def summary_table(self) -> List[str]:
+        """Per-kernel summary lines: one row per kernel, worst first.
+
+        Always includes every compared kernel (PASS rows too): a CI log
+        that only lists the guilty gives no sense of blast radius.
+        """
+        kernels = sorted(set(self.compared) |
+                         {f.kernel for f in self.failures if f.kernel})
+        rows = [("kernel", "compared", "missing", "perf", "claims",
+                 "status")]
+        for k in kernels:
+            counts = {kind: sum(1 for f in self.failures
+                                if f.kernel == k and f.kind == kind)
+                      for kind in ("missing", "perf", "claim")}
+            status = "FAIL" if any(counts.values()) else "pass"
+            rows.append((k, str(self.compared.get(k, 0)),
+                         str(counts["missing"]), str(counts["perf"]),
+                         str(counts["claim"]), status))
+        widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
+        return ["  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip()
+                for r in rows]
 
 
 def _index(recsets: Iterable[RecordSet],
@@ -42,44 +92,58 @@ def _index(recsets: Iterable[RecordSet],
     return out
 
 
-def compare(baseline_dir: str, candidate_dir: str, threshold: float = 0.25,
-            kernels: Optional[Iterable[str]] = None) -> List[str]:
-    """Return the list of failure messages (empty = gate passes)."""
+def gate(baseline_dir: str, candidate_dir: str, threshold: float = 0.25,
+         kernels: Optional[Iterable[str]] = None) -> GateResult:
+    """Run the full gate and return structured per-kernel results."""
     wanted = set(kernels) if kernels is not None else None
     base_sets = load_dir(baseline_dir)
     cand_sets = [rs for rs in load_dir(candidate_dir)
                  if wanted is None or rs.kernel in wanted]
     base = _index(base_sets, wanted)
     cand = _index(cand_sets, wanted)
-    failures: List[str] = []
+    failures: List[Failure] = []
     if not base:
         # an over-narrow --kernels filter must not pass vacuously
-        failures.append(
+        failures.append(Failure(
+            "empty", "",
             f"empty comparison: no baseline records in {baseline_dir!r} "
-            f"match kernels={sorted(wanted) if wanted else 'all'}")
+            f"match kernels={sorted(wanted) if wanted else 'all'}"))
 
     for key in sorted(set(base) - set(cand)):
-        failures.append(f"missing: {'/'.join(map(str, key))} present in "
-                        f"baseline but absent from candidate")
+        failures.append(Failure(
+            "missing", key[0],
+            f"missing: {'/'.join(map(str, key))} present in "
+            f"baseline but absent from candidate"))
     for key in sorted(set(cand) - set(base)):
         print(f"note: new sweep point {'/'.join(map(str, key))}")
 
+    compared: Dict[str, int] = {}
     for key in sorted(set(base) & set(cand)):
+        compared[key[0]] = compared.get(key[0], 0) + 1
         old, new = base[key].ref_us_per_call, cand[key].ref_us_per_call
         if old > 0 and new > old * (1.0 + threshold):
-            failures.append(
+            failures.append(Failure(
+                "perf", key[0],
                 f"perf regression: {'/'.join(map(str, key))} "
                 f"ref_us_per_call {old:.1f} -> {new:.1f} "
-                f"(+{(new / old - 1) * 100:.0f}% > {threshold * 100:.0f}%)")
+                f"(+{(new / old - 1) * 100:.0f}% > {threshold * 100:.0f}%)"))
         elif old > 0 and new < old * (1.0 - threshold):
             print(f"note: {'/'.join(map(str, key))} sped up "
                   f"{old:.1f} -> {new:.1f} us")
 
     for v in violations(check_records(cand_sets)):
-        failures.append(
+        failures.append(Failure(
+            "claim", v.record.kernel,
             f"claim violation: {'/'.join(map(str, v.record.point))} "
-            f"[{v.claim}] {v.detail}")
-    return failures
+            f"[{v.claim}] {v.detail}"))
+    return GateResult(failures=tuple(failures), compared=compared)
+
+
+def compare(baseline_dir: str, candidate_dir: str, threshold: float = 0.25,
+            kernels: Optional[Iterable[str]] = None) -> List[str]:
+    """Return the list of failure messages (empty = gate passes)."""
+    return gate(baseline_dir, candidate_dir, threshold=threshold,
+                kernels=kernels).messages
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -93,12 +157,15 @@ def main(argv: Optional[List[str]] = None) -> int:
                    help="comma-separated kernel subset to compare")
     args = p.parse_args(argv)
     kernels = args.kernels.split(",") if args.kernels else None
-    failures = compare(args.baseline, args.candidate,
-                       threshold=args.threshold, kernels=kernels)
-    for f in failures:
-        print(f"FAIL: {f}", file=sys.stderr)
-    if failures:
-        print(f"{len(failures)} gate failure(s)", file=sys.stderr)
+    result = gate(args.baseline, args.candidate,
+                  threshold=args.threshold, kernels=kernels)
+    for f in result.failures:
+        print(f"FAIL: {f.message}", file=sys.stderr)
+    if result.failures:
+        print(f"\n{len(result.failures)} gate failure(s); per-kernel "
+              "summary:", file=sys.stderr)
+        for line in result.summary_table():
+            print(line, file=sys.stderr)
         return 1
     print("gate passed: no perf regressions, no claim violations")
     return 0

@@ -9,11 +9,15 @@ list to maintain.
   roofline       -- Fig. 2 (two-ceiling roofline placements)
   kernels        -- every registered kernel x engine x size x dtype
   <kernel name>  -- one registered kernel (e.g. ``scale``, ``triad``)
+  tune           -- tile-config autotuner -> tuned.json (see
+                    ``benchmarks.tune`` for its flags)
   report         -- regenerate REPORT.md + docs/benchmarks/ from runs/
 
 Prints ``name,us_per_call,derived`` CSV rows; kernel sweeps also write
 ``runs/BENCH_<kernel>.json`` (override the directory with ``--out DIR``
-to produce a candidate set for ``benchmarks/compare.py``).
+to produce a candidate set for ``benchmarks/compare.py``; pass
+``--tuned tuned.json`` to sweep with tuned tile configs and record
+them per sweep point).
 """
 from __future__ import annotations
 
@@ -42,6 +46,10 @@ def _report(argv: List[str]) -> None:
 
 def main(argv: Optional[List[str]] = None) -> None:
     argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "tune":
+        # the tuner has its own argparse surface (budget, out, ...)
+        from . import tune
+        raise SystemExit(tune.main(argv[1:]))
     out_dir, out_given = "runs", "--out" in argv
     if out_given:
         i = argv.index("--out")
@@ -50,7 +58,19 @@ def main(argv: Optional[List[str]] = None) -> None:
         except IndexError:
             raise SystemExit("--out requires a directory argument")
         del argv[i:i + 2]
+    tuned = None
+    if "--tuned" in argv:
+        i = argv.index("--tuned")
+        try:
+            tuned = argv[i + 1]
+        except IndexError:
+            raise SystemExit("--tuned requires a tuned.json path argument")
+        del argv[i:i + 2]
     if argv and argv[0] == "report":
+        if tuned is not None:
+            # the report is a pure function of runs/; a tuned cache
+            # only affects sweeps, so silently ignoring it would lie
+            raise SystemExit("--tuned only applies to kernel sweeps")
         # `report runs-ci` and `report --out runs-ci` both read runs-ci
         if out_given and len(argv) > 1:
             raise SystemExit("report: pass the records dir positionally "
@@ -59,21 +79,23 @@ def main(argv: Optional[List[str]] = None) -> None:
         return
     kernel_names = set(registry.names())
     which = argv or (sorted(THEORY) + ["kernels"])
-    if out_given and not any(k == "kernels" or k in kernel_names
-                             for k in which):
+    sweeps = any(k == "kernels" or k in kernel_names for k in which)
+    if out_given and not sweeps:
         raise SystemExit("--out only applies to kernel sweeps or report")
+    if tuned is not None and not sweeps:
+        raise SystemExit("--tuned only applies to kernel sweeps")
     print("name,us_per_call,derived")
     for key in which:
         if key in THEORY:
             emit(THEORY[key].rows())
         elif key == "kernels":
-            emit(bench_kernels.rows(json_dir=out_dir))
+            emit(bench_kernels.rows(json_dir=out_dir, tuned=tuned))
         elif key in kernel_names:
-            emit(bench_kernels.rows([key], json_dir=out_dir))
+            emit(bench_kernels.rows([key], json_dir=out_dir, tuned=tuned))
         else:
             raise SystemExit(
                 f"unknown benchmark {key!r}; have "
-                f"{sorted(THEORY) + ['kernels', 'report'] + sorted(kernel_names)}")
+                f"{sorted(THEORY) + ['kernels', 'report', 'tune'] + sorted(kernel_names)}")
 
 
 if __name__ == "__main__":

@@ -12,7 +12,7 @@ to pick between their MXU and VPU implementations (``engine='auto'``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 from .balance import machine_balance
 from .bounds import best_case_speedup, speedup_overlapped
@@ -30,6 +30,12 @@ class Advice:
     balance_matrix: float
     max_speedup_matrix: float   # tightest paper bound if we used the MXU
     reason: str
+    # tile config the dispatch layer will apply for this decision, as a
+    # hashable sorted (name, value) tuple; None = static defaults.
+    # Attached by Dispatcher.advise from its TuningPolicy, not here:
+    # tile choice is a bandwidth-saturation concern, orthogonal to the
+    # engine decision this class owns.
+    tile_config: Optional[Tuple[Tuple[str, int], ...]] = None
 
     def __str__(self) -> str:  # pragma: no cover - cosmetic
         return (f"[{self.kernel}] I={self.intensity:.4g} -> {self.engine} "

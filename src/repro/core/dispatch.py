@@ -10,6 +10,11 @@ flatten/pad/tile/unpad plumbing around ``pallas_call``, and (3) the
     advisor, memoizing one ``Advice`` per (kernel, shape, dtype,
     hardware) so steady-state dispatch is a dict hit, not a roofline
     re-derivation.
+  * ``TuningPolicy`` -- consults a versioned ``tuned.json`` cache
+    (``repro.tuning.cache``) for the winning tile configuration per
+    (kernel, engine, dtype, hardware model) before falling back to the
+    static tile defaults, so the vector-engine baseline the paper's
+    Eq. 23/24 ceiling is checked against is the *bandwidth-tuned* one.
   * ``elementwise_call`` -- the shared flatten/pad/tile/unpad wrapper and
     block-spec construction for same-shape elementwise kernels (SCALE,
     STREAM Triad, AXPY, ...): a kernel family supplies only its per-tile
@@ -23,7 +28,9 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, Hashable, Optional, Sequence, Tuple
+import os
+from typing import (Any, Callable, Dict, Hashable, Mapping, Optional,
+                    Sequence, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -33,10 +40,13 @@ from .advisor import DEFAULT_ADVISOR, Advice, EngineAdvisor
 from .intensity import KernelTraits
 
 __all__ = [
-    "DEFAULT_DISPATCHER", "Dispatcher", "default_cache_key",
-    "elementwise_call", "normalize_engine",
+    "DEFAULT_DISPATCHER", "Dispatcher", "TUNED_CACHE_ENV", "TuningPolicy",
+    "default_cache_key", "elementwise_call", "normalize_engine",
     "ELEMENTWISE_BLOCK_ROWS", "ELEMENTWISE_LANES",
 ]
+
+#: Environment variable naming a tuned.json for the default policy.
+TUNED_CACHE_ENV = "REPRO_TUNED_JSON"
 
 _ENGINE_ALIASES = {
     "mxu": "matrix", "matrix": "matrix",
@@ -98,6 +108,67 @@ def default_cache_key(*args, **kwargs) -> Hashable:
     return (_probe(args), _probe(kwargs))
 
 
+def _dtype_of(args: tuple, kwargs: dict) -> Optional[str]:
+    """The dtype string of the first array-ish call argument, if any.
+
+    Tile configs are cached per (kernel, engine, dtype, hw): dtype is
+    part of the bandwidth story (bytes moved per element), so it is
+    resolved from the live arguments the same way ``_probe`` sees them.
+    """
+    for x in list(args) + list(kwargs.values()):
+        if hasattr(x, "dtype") and hasattr(x, "shape"):
+            return str(x.dtype)
+    return None
+
+
+class TuningPolicy:
+    """Tile-configuration lookups against a ``tuned.json`` cache.
+
+    The policy layer between the dispatcher and
+    ``repro.tuning.cache.TuningCache``: ``lookup`` returns the winning
+    tile params for (kernel, engine, dtype, hw model) or None, in which
+    case callers use the static defaults.  The default policy lazily
+    loads the path named by :data:`TUNED_CACHE_ENV` (forgivingly — a
+    corrupt or version-mismatched file warns and degrades to static
+    defaults rather than breaking dispatch).
+    """
+
+    def __init__(self, cache=None, path: Optional[str] = None):
+        self._cache = cache
+        self._path = path
+        self._resolved = cache is not None
+
+    @property
+    def cache(self):
+        """The backing TuningCache (lazy-loaded), or None if empty."""
+        if not self._resolved:
+            path = self._path or os.environ.get(TUNED_CACHE_ENV)
+            if path:
+                from ..tuning.cache import TuningCache
+                self._cache = TuningCache.load_or_warn(path)
+            self._resolved = True
+        return self._cache
+
+    def load(self, path: str) -> None:
+        """Point the policy at a tuned.json (forgiving load, see above)."""
+        from ..tuning.cache import TuningCache
+        self._cache = TuningCache.load_or_warn(path)
+        self._resolved = True
+
+    def set_cache(self, cache) -> None:
+        """Install an in-memory TuningCache (None = static defaults)."""
+        self._cache = cache
+        self._resolved = True
+
+    def lookup(self, kernel: str, engine: str, dtype: Optional[str],
+               hw_model: str):
+        """The TunedEntry for this key, or None (use static defaults)."""
+        cache = self.cache
+        if cache is None or dtype is None:
+            return None
+        return cache.lookup(kernel, engine, dtype, hw_model)
+
+
 class Dispatcher:
     """Advisor-backed engine router with a memoized Advice cache.
 
@@ -107,8 +178,10 @@ class Dispatcher:
     dispatch is a dict hit.
     """
 
-    def __init__(self, advisor: Optional[EngineAdvisor] = None):
+    def __init__(self, advisor: Optional[EngineAdvisor] = None,
+                 tuning: Optional[TuningPolicy] = None):
         self.advisor = advisor if advisor is not None else DEFAULT_ADVISOR
+        self.tuning = tuning if tuning is not None else TuningPolicy()
         self._cache: Dict[Hashable, Advice] = {}
         self._hits = 0
         self._misses = 0
@@ -135,12 +208,26 @@ class Dispatcher:
 
         The cache key is (kernel, hardware, shapes/dtypes/static params);
         the op's ``KernelTraits`` factory (W flops, Q bytes per Eq. 2)
-        only runs on a miss.
+        only runs on a miss.  The returned Advice also records the tile
+        config the TuningPolicy would apply for the chosen engine
+        (``tile_config=None`` means static defaults), so BENCH records
+        and the claims report can say *which* tiles produced a number.
         """
         key_fn = op.cache_key or default_cache_key
         key = (op.name, self.hw.name, key_fn(*args, **kwargs))
-        return self._memoized(
-            key, lambda: self.advisor.advise(op.traits(*args, **kwargs)))
+
+        def make() -> Advice:
+            advice = self.advisor.advise(op.traits(*args, **kwargs))
+            entry = self.tuning.lookup(op.name, advice.engine,
+                                       _dtype_of(args, kwargs),
+                                       self.hw.name)
+            if entry is not None:
+                advice = dataclasses.replace(
+                    advice,
+                    tile_config=tuple(sorted(entry.params.items())))
+            return advice
+
+        return self._memoized(key, make)
 
     def advise_traits(self, traits: KernelTraits) -> Advice:
         """Memoized Advice (paper §6) for hand-built Eq. 2 traits.
@@ -165,16 +252,84 @@ class Dispatcher:
             return forced
         return self.advise(op, *args, **kwargs).engine
 
+    def tile_params(self, op, eng: str, *args,
+                    **kwargs) -> Optional[Dict[str, int]]:
+        """The tuned tile params this call would use, or None (defaults).
+
+        Consults the TuningPolicy with the op's name, the resolved
+        engine, the call's dtype, and the advisor's hardware model --
+        the granularity winners are cached at.
+        """
+        entry = self.tuning.lookup(op.name, eng, _dtype_of(args, kwargs),
+                                   self.hw.name)
+        return dict(entry.params) if entry is not None else None
+
     def run(self, op, *args, engine: str = "auto", interpret: bool = True,
-            **kwargs):
-        """Advisor-route (paper §6) and launch one registered op."""
-        eng = self.resolve(op, *args, engine=engine, **kwargs)
+            tile_config: Optional[Mapping[str, int]] = None, **kwargs):
+        """Advisor-route (paper §6), tile-tune, and launch one op.
+
+        Tile precedence: an explicit ``tile_config`` argument overrides
+        everything (including per-call kwargs it collides with); a
+        TuningPolicy hit overrides the static defaults but *not*
+        explicitly passed kwargs; otherwise the family's static
+        defaults apply.  Config keys are validated against the op's
+        declared ``tile_space`` so a stale cache cannot smuggle unknown
+        kwargs into a kernel launch.
+        """
+        # tile params never move a kernel on the roofline: strip them
+        # before the advise path so traits factories only see semantic
+        # kwargs, then re-apply them for the launch itself
+        semantic = {k: v for k, v in kwargs.items()
+                    if k not in op.tile_space}
+        eng = self.resolve(op, *args, engine=engine, **semantic)
         fn = op.engines.get(eng)
         if fn is None:
             raise ValueError(
                 f"kernel {op.name!r} has no {eng!r} variant "
                 f"(has {sorted(op.engines)})")
+        explicit = tile_config is not None
+        cfg = dict(tile_config) if explicit else \
+            self.tile_params(op, eng, *args, **semantic)
+        if cfg:
+            unknown = sorted(set(cfg) - set(op.tile_space))
+            if unknown and explicit:
+                raise ValueError(
+                    f"kernel {op.name!r} does not accept tile "
+                    f"parameter(s) {unknown}; its tile space is "
+                    f"{sorted(op.tile_space) or 'empty'}")
+            if unknown:
+                # a stale cache entry is advisory, never a crash: keep
+                # the params this build still knows, warn about the rest
+                import warnings
+
+                from ..tuning.cache import TuningCacheWarning
+                warnings.warn(
+                    f"tuned config for {op.name}/{eng} names unknown "
+                    f"tile parameter(s) {unknown}; ignoring them "
+                    f"(tile space: {sorted(op.tile_space) or 'empty'})",
+                    TuningCacheWarning, stacklevel=2)
+                cfg = {k: v for k, v in cfg.items()
+                       if k in op.tile_space}
+            if explicit:
+                kwargs = {**kwargs, **cfg}
+            else:  # tuned values fill gaps; a None kwarg is a gap too
+                kwargs = {**kwargs, **{k: v for k, v in cfg.items()
+                                       if kwargs.get(k) is None}}
         return fn(*args, interpret=interpret, **kwargs)
+
+    def load_tuned(self, path: str) -> None:
+        """Adopt a tuned.json and invalidate memoized Advice.
+
+        The Advice cache embeds tile configs, so swapping caches must
+        drop it -- otherwise stale configs keep reporting.
+        """
+        self.tuning.load(path)
+        self.cache_clear()
+
+    def set_tuning_cache(self, cache) -> None:
+        """Install an in-memory TuningCache (None = static defaults)."""
+        self.tuning.set_cache(cache)
+        self.cache_clear()
 
     def cache_info(self) -> Dict[str, int]:
         """Advice-cache statistics: {size, hits, misses}."""
@@ -218,8 +373,8 @@ def _elementwise_grid(body, scalars, arrays, *, block_rows: int,
 
 def elementwise_call(body: Callable, arrays: Sequence[jnp.ndarray],
                      scalars: Sequence[Any] = (), *, interpret: bool = True,
-                     lanes: int = ELEMENTWISE_LANES,
-                     block_rows: int = ELEMENTWISE_BLOCK_ROWS) -> jnp.ndarray:
+                     lanes: Optional[int] = None,
+                     block_rows: Optional[int] = None) -> jnp.ndarray:
     """Run an elementwise Pallas body over same-shape arrays of any shape.
 
     The shared plumbing behind the paper's §3.1 elementwise suite
@@ -228,7 +383,14 @@ def elementwise_call(body: Callable, arrays: Sequence[jnp.ndarray],
     tiles; this wrapper owns the flatten -> pad-to-tile -> reshape ->
     grid/block-spec construction -> unpad round trip that every
     elementwise kernel family previously duplicated.
+
+    ``block_rows``/``lanes`` are the tunable tile shape; ``None`` means
+    the static defaults (the autotuner in ``repro.tuning`` searches
+    this space and the dispatch layer passes winners down per call).
     """
+    lanes = ELEMENTWISE_LANES if lanes is None else int(lanes)
+    block_rows = (ELEMENTWISE_BLOCK_ROWS if block_rows is None
+                  else int(block_rows))
     arrays = tuple(arrays)
     shape, dtype = arrays[0].shape, arrays[0].dtype
     for a in arrays[1:]:

@@ -1,0 +1,52 @@
+"""Canonical wall-time measurement: median + IQR over warmed iterations.
+
+One implementation serves both measurement consumers — the benchmark
+harness (``benchmarks.common`` re-exports these names) and the tile
+autotuner (``repro.tuning.tuner``) — so the statistics behind
+``ref_us_per_call`` and behind tuned-vs-default deltas can never
+drift apart.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Callable, List, NamedTuple
+
+import jax
+
+__all__ = ["Timing", "time_fn"]
+
+
+class Timing(NamedTuple):
+    """One timing measurement: median + spread + sample count."""
+
+    median_us: float  # median wall time per call, microseconds
+    iqr_us: float     # interquartile range (q75 - q25), microseconds
+    iters: int        # timed iterations behind the statistics
+
+
+def _quantile(sorted_times: List[float], q: float) -> float:
+    """Linear-interpolated quantile of an ascending-sorted sample."""
+    idx = q * (len(sorted_times) - 1)
+    lo, hi = math.floor(idx), math.ceil(idx)
+    frac = idx - lo
+    return sorted_times[lo] * (1.0 - frac) + sorted_times[hi] * frac
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> Timing:
+    """Wall-time statistics in microseconds (XLA-CPU; relative signal only).
+
+    Returns median + IQR + iteration count so consumers can see
+    measurement spread, not just a point estimate.
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    median = _quantile(times, 0.5) * 1e6
+    iqr = (_quantile(times, 0.75) - _quantile(times, 0.25)) * 1e6
+    return Timing(median_us=median, iqr_us=iqr, iters=iters)

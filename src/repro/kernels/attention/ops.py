@@ -9,7 +9,9 @@ contraction drives the MXU or the VPU.
 from __future__ import annotations
 
 import functools
+import math
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -19,6 +21,13 @@ from .flash_decode import flash_decode
 from .ref import decode_attention_ref
 
 __all__ = ["ATTENTION_OP", "decode_attention"]
+
+#: Static KV-block length (what untuned dispatch uses, capped at S).
+DEFAULT_BLOCK_S = 512
+
+#: KV-block lengths the autotuner may try: the VMEM-residency /
+#: grid-step-count trade-off of streaming the cache once.
+ATTENTION_TILE_SPACE = {"block_s": (128, 256, 512)}
 
 
 def _traits(q, k, v, kv_len, *, block_s=None):
@@ -30,11 +39,23 @@ def _traits(q, k, v, kv_len, *, block_s=None):
     return KernelTraits("flash_decode", work, traffic)
 
 
+def _clamp_block_s(s: int, block_s) -> int:
+    """Largest divisor of the cache length not exceeding the request.
+
+    A tuned block_s is cached per (kernel, engine, dtype) and must stay
+    valid for every cache length it meets; gcd keeps it a divisor of S
+    (power-of-two block candidates make this exact).
+    """
+    bs = min(int(block_s), s)
+    return max(math.gcd(s, bs), 1)
+
+
 def _engine_fn(engine: str):
     def call(q, k, v, kv_len, *, block_s=None, interpret: bool = True):
         if block_s is None:
-            block_s = min(512, k.shape[1])
-        return flash_decode(q, k, v, kv_len, block_s=block_s,
+            block_s = DEFAULT_BLOCK_S
+        bs = _clamp_block_s(k.shape[1], block_s)
+        return flash_decode(q, k, v, kv_len, block_s=bs,
                             engine=engine, interpret=interpret)
     return call
 
@@ -53,6 +74,47 @@ def _make_inputs(rng: np.random.Generator, size: int, dtype: str = "float32"):
     return (q, k, v, size - size // 8), {}
 
 
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def _chunked_decode_jnp(q, k, v, kv_len, *, block_s: int):
+    """Pure-jnp blockwise online-softmax decode (the timing proxy).
+
+    The same streaming structure as ``flash_decode`` — one pass over
+    the cache in (block_s, Dh) chunks with a running (m, l, acc)
+    accumulator — expressed as an unrolled XLA loop, so its CPU wall
+    time follows the block-length choice the way the Pallas grid would.
+    """
+    b, kh, g, dh = q.shape
+    s = k.shape[1]
+    qf = q.reshape(b * kh, g, dh).astype(jnp.float32)
+    kf = jnp.moveaxis(k, 2, 1).reshape(b * kh, s, dh).astype(jnp.float32)
+    vf = jnp.moveaxis(v, 2, 1).reshape(b * kh, s, dh).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    m = jnp.full((b * kh, g, 1), -1e30, jnp.float32)
+    length = jnp.zeros((b * kh, g, 1), jnp.float32)
+    acc = jnp.zeros((b * kh, g, dh), jnp.float32)
+    for j in range(s // block_s):
+        kb = jax.lax.slice_in_dim(kf, j * block_s, (j + 1) * block_s, axis=1)
+        vb = jax.lax.slice_in_dim(vf, j * block_s, (j + 1) * block_s, axis=1)
+        sc = jnp.einsum("bgd,bsd->bgs", qf, kb) * scale
+        pos = j * block_s + jnp.arange(block_s)[None, None, :]
+        sc = jnp.where(pos < kv_len, sc, -1e30)
+        m_new = jnp.maximum(m, sc.max(axis=-1, keepdims=True))
+        p = jnp.exp(sc - m_new)
+        corr = jnp.exp(m - m_new)
+        length = length * corr + p.sum(axis=-1, keepdims=True)
+        acc = acc * corr + jnp.einsum("bgs,bsd->bgd", p, vb)
+        m = m_new
+    out = acc / jnp.maximum(length, 1e-30)
+    return out.reshape(b, kh, g, dh).astype(q.dtype)
+
+
+def _tune_proxy(params, q, k, v, kv_len, *, block_s=None):
+    bs = _clamp_block_s(k.shape[1],
+                        params.get("block_s", block_s or DEFAULT_BLOCK_S))
+    return _chunked_decode_jnp(q, k, v, jnp.asarray(kv_len, jnp.int32),
+                               block_s=bs)
+
+
 ATTENTION_OP = register(EngineOp(
     name="attention",
     traits=_traits,
@@ -63,6 +125,9 @@ ATTENTION_OP = register(EngineOp(
     dtypes=("float32", "bfloat16"),
     test_size=256,
     doc="flash-decode GQA attention over a KV cache; I ~= 2G/D",
+    tile_space=ATTENTION_TILE_SPACE,
+    tile_defaults={"block_s": DEFAULT_BLOCK_S},
+    tune_proxy=_tune_proxy,
 ))
 
 
@@ -73,7 +138,8 @@ def decode_attention(q, k, v, kv_len, *, engine: str = "auto",
     Intensity ~= (4 flops per cache element) / (2 bytes per element) --
     memory-bound by ~100x on v5e; 'auto' therefore routes to the vector
     variant, with the MXU formulation one flag away (and, per the paper,
-    no faster).
+    no faster).  ``block_s=None`` lets the dispatch layer apply a tuned
+    KV-block length (or the static default of 512, capped at S).
     """
     return ATTENTION_OP(q, k, v, kv_len, engine=engine, block_s=block_s,
                         interpret=interpret)

@@ -32,12 +32,16 @@ def _axpy_mxu_kernel(a_ref, x_ref, y_ref, o_ref):
 
 
 def axpy_vector(a, x: jnp.ndarray, y: jnp.ndarray, *,
-                interpret: bool = True) -> jnp.ndarray:
+                interpret: bool = True, block_rows: int = None,
+                lanes: int = None) -> jnp.ndarray:
     return elementwise_call(_axpy_vpu_kernel, (x, y), (a,),
-                            interpret=interpret)
+                            interpret=interpret, block_rows=block_rows,
+                            lanes=lanes)
 
 
 def axpy_matrix(a, x: jnp.ndarray, y: jnp.ndarray, *,
-                interpret: bool = True) -> jnp.ndarray:
+                interpret: bool = True, block_rows: int = None,
+                lanes: int = None) -> jnp.ndarray:
     return elementwise_call(_axpy_mxu_kernel, (x, y), (a,),
-                            interpret=interpret)
+                            interpret=interpret, block_rows=block_rows,
+                            lanes=lanes)

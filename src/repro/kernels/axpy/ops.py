@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...core.intensity import axpy as axpy_traits
+from ...tuning.proxy import tiled_elementwise
+from ..elementwise_tuning import ELEMENTWISE_TILE_DEFAULTS, ELEMENTWISE_TILE_SPACE
 from ..registry import EngineOp, register
 from .axpy import axpy_matrix, axpy_vector
 from .ref import axpy_ref
@@ -23,6 +25,15 @@ def _make_inputs(rng: np.random.Generator, size: int, dtype: str = "float32"):
     return (0.75, x, y), {}
 
 
+def _proxy_body(scalars, x, y):
+    return (scalars[0] * x + y).astype(x.dtype)
+
+
+def _tune_proxy(params, a, x, y):
+    """Pure-XLA tiled y = a*x + y for off-hardware candidate timing."""
+    return tiled_elementwise(_proxy_body, (x, y), (a,), **params)
+
+
 AXPY_OP = register(EngineOp(
     name="axpy",
     traits=_traits,
@@ -33,6 +44,9 @@ AXPY_OP = register(EngineOp(
     dtypes=("float32", "bfloat16"),
     test_size=300_000,
     doc="AXPY y = a*x + y; I = 2/(3D), memory-bound everywhere",
+    tile_space=ELEMENTWISE_TILE_SPACE,
+    tile_defaults=ELEMENTWISE_TILE_DEFAULTS,
+    tune_proxy=_tune_proxy,
 ))
 
 

@@ -1,0 +1,26 @@
+"""Shared autotuning declarations for the elementwise families.
+
+SCALE, STREAM Triad, and AXPY all launch through
+``repro.core.dispatch.elementwise_call``, so they share one tile space:
+``block_rows`` x ``lanes`` VMEM tiles.  The candidate values bracket
+the static default (256 x 1024 = 1 MiB f32 tiles) with halvings and a
+doubling on the row axis — the range where v5e-class VMEM residency
+and grid-step overhead actually trade off; anything smaller drowns in
+per-step overhead, anything larger cannot double-buffer in 128 MiB-class
+VMEM alongside two operands.
+"""
+from ..core.dispatch import ELEMENTWISE_BLOCK_ROWS, ELEMENTWISE_LANES
+
+__all__ = ["ELEMENTWISE_TILE_DEFAULTS", "ELEMENTWISE_TILE_SPACE"]
+
+#: Tile parameter name -> candidate values for elementwise families.
+ELEMENTWISE_TILE_SPACE = {
+    "block_rows": (128, 256, 512),
+    "lanes": (512, 1024),
+}
+
+#: The static defaults ``elementwise_call`` applies when untuned.
+ELEMENTWISE_TILE_DEFAULTS = {
+    "block_rows": ELEMENTWISE_BLOCK_ROWS,
+    "lanes": ELEMENTWISE_LANES,
+}

@@ -50,12 +50,31 @@ class EngineOp:
     test_size: int = 0
     cache_key: Optional[Callable[..., Hashable]] = None
     doc: str = ""
+    # -- autotuning opt-in (see repro.tuning / docs/tuning.md) ----------
+    # tile parameter name -> candidate values; empty = not tunable.
+    # Every engine entry point must accept each name as a keyword.
+    tile_space: Mapping[str, Tuple[int, ...]] = dataclasses.field(
+        default_factory=dict)
+    # the static default per tile parameter (what untuned dispatch uses;
+    # anchors the tuner's tuned-vs-default delta)
+    tile_defaults: Mapping[str, int] = dataclasses.field(
+        default_factory=dict)
+    # (params, *args, **kwargs) -> pure-XLA computation honoring the tile
+    # params: the off-hardware timing stand-in (repro.tuning.proxy)
+    tune_proxy: Optional[Callable[..., Any]] = None
 
     def __call__(self, *args, engine: str = "auto", interpret: bool = True,
+                 tile_config: Optional[Mapping[str, int]] = None,
                  **kwargs):
-        """Launch via the default dispatcher ('auto' = paper §6 routing)."""
+        """Launch via the default dispatcher ('auto' = paper §6 routing).
+
+        ``tile_config`` forces a tile configuration for this call;
+        omitted, the dispatcher consults its TuningPolicy and then the
+        family's static defaults.
+        """
         return DEFAULT_DISPATCHER.run(self, *args, engine=engine,
-                                      interpret=interpret, **kwargs)
+                                      interpret=interpret,
+                                      tile_config=tile_config, **kwargs)
 
     def advice(self, *args, **kwargs):
         """The memoized §6 Advice (engine, boundedness, Eq. 23/24 ceiling)."""

@@ -40,9 +40,15 @@ def _scale_mxu_kernel(q_ref, b_ref, o_ref):
         preferred_element_type=jnp.float32).astype(o_ref.dtype)
 
 
-def scale_vector(b: jnp.ndarray, q, *, interpret: bool = True) -> jnp.ndarray:
-    return elementwise_call(_scale_vpu_kernel, (b,), (q,), interpret=interpret)
+def scale_vector(b: jnp.ndarray, q, *, interpret: bool = True,
+                 block_rows: int = None, lanes: int = None) -> jnp.ndarray:
+    return elementwise_call(_scale_vpu_kernel, (b,), (q,),
+                            interpret=interpret, block_rows=block_rows,
+                            lanes=lanes)
 
 
-def scale_matrix(b: jnp.ndarray, q, *, interpret: bool = True) -> jnp.ndarray:
-    return elementwise_call(_scale_mxu_kernel, (b,), (q,), interpret=interpret)
+def scale_matrix(b: jnp.ndarray, q, *, interpret: bool = True,
+                 block_rows: int = None, lanes: int = None) -> jnp.ndarray:
+    return elementwise_call(_scale_mxu_kernel, (b,), (q,),
+                            interpret=interpret, block_rows=block_rows,
+                            lanes=lanes)

@@ -4,6 +4,7 @@ from __future__ import annotations
 
 import functools
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -11,18 +12,27 @@ from ...core.intensity import stencil as stencil_traits
 from ..registry import EngineOp, register
 from .defs import TABLE3_DEPTH, StencilSpec, suite
 from .ref import stencil_ref
-from .stencil import stencil_apply
+from .stencil import (_domain_mask, _round_up, _vpu_step, stencil_apply)
 
 __all__ = ["STENCIL_OP", "stencil", "suite", "TABLE3_DEPTH", "StencilSpec"]
 
+#: Static leading-axis block height (``stencil_apply``'s default).
+DEFAULT_BLOCK_ROWS = 128
 
-def _traits(u, spec: StencilSpec, *, steps: int = 1, block_rows: int = 128):
+#: Leading-axis block heights the autotuner may try.  The halo grows
+#: with temporal depth (t * r rows re-read per block edge), so the
+#: sweet spot shifts with ``steps`` — exactly why this is tuned, not
+#: hardcoded.
+STENCIL_TILE_SPACE = {"block_rows": (32, 64, 128, 256)}
+
+
+def _traits(u, spec: StencilSpec, *, steps: int = 1, block_rows=None):
     del block_rows
     return stencil_traits(spec.num_points, t=steps, dsize=u.dtype.itemsize,
                           npoints_domain=u.size)
 
 
-def _reference(u, spec: StencilSpec, *, steps: int = 1, block_rows: int = 128):
+def _reference(u, spec: StencilSpec, *, steps: int = 1, block_rows=None):
     del block_rows  # implementation tiling knob; the oracle has none
     return stencil_ref(u, spec, steps=steps)
 
@@ -31,32 +41,100 @@ def _make_inputs(rng: np.random.Generator, size: int, dtype: str = "float32"):
     """size = 2D domain side; the Table-3 5-point star at its paper depth."""
     spec = suite()["2d5pt"]
     u = jnp.asarray(rng.standard_normal((size, size)), dtype)
-    return (u, spec), {"steps": TABLE3_DEPTH["2d5pt"], "block_rows": 64}
+    return (u, spec), {"steps": TABLE3_DEPTH["2d5pt"]}
+
+
+def _engine_fn(engine: str):
+    def call(u, spec: StencilSpec, *, steps: int = 1, block_rows=None,
+             interpret: bool = True):
+        br = DEFAULT_BLOCK_ROWS if block_rows is None else int(block_rows)
+        # a block must contain its own halo (t*r rows each side); clamp
+        # up so a tuned config for shallow blocking can't crash deep runs
+        br = max(br, steps * spec.radius)
+        return stencil_apply(u, spec, steps=steps, engine=engine,
+                             block_rows=br, interpret=interpret)
+    return call
+
+
+@functools.partial(
+    jax.jit, static_argnames=("spec", "steps", "block_rows"))
+def _blocked_stencil_jnp(u: jnp.ndarray, spec: StencilSpec, *,
+                         steps: int, block_rows: int) -> jnp.ndarray:
+    """Pure-jnp reproduction of ``stencil_apply``'s blocked pipeline.
+
+    Same padding math and per-block trapezoid (halo concat, fused VPU
+    steps, domain re-mask), but with an unrolled XLA loop instead of a
+    Pallas grid — the off-hardware timing proxy whose wall time tracks
+    the tile choice (block count, halo recompute, padding waste).
+    """
+    true_shape = u.shape
+    halo = steps * spec.radius
+    block_rows = max(block_rows, halo)
+    lane_mult = 128 if u.ndim >= 2 else 1
+    pads = [(0, 0)]
+    for ax in range(1, u.ndim):
+        right = _round_up(u.shape[ax] + 2 * halo,
+                          lane_mult) - u.shape[ax] - halo
+        pads.append((halo, right))
+    lead_round = _round_up(u.shape[0], block_rows) - u.shape[0]
+    pads[0] = (block_rows, lead_round + block_rows)
+    up = jnp.pad(u, pads)
+
+    n_tiles = (up.shape[0] - 2 * block_rows) // block_rows
+    out_blocks = []
+    for i in range(n_tiles):
+        top = block_rows + i * block_rows
+        tile = jax.lax.slice_in_dim(up, top - halo,
+                                    top + block_rows + halo, axis=0)
+        row0 = i * block_rows - halo
+        mask = _domain_mask(tile.shape, jnp.asarray(row0, jnp.int32),
+                            halo, true_shape, tile.dtype)
+        for _ in range(steps):
+            tile = _vpu_step(tile, spec) * mask
+        out_blocks.append(tile[halo:halo + block_rows])
+    out = jnp.concatenate(out_blocks, axis=0)
+    sl = [slice(0, true_shape[0])]
+    for ax in range(1, u.ndim):
+        sl.append(slice(halo, halo + true_shape[ax]))
+    return out[tuple(sl)]
+
+
+def _tune_proxy(params, u, spec: StencilSpec, *, steps: int = 1,
+                block_rows=None):
+    br = int(params.get("block_rows",
+                        block_rows or DEFAULT_BLOCK_ROWS))
+    return _blocked_stencil_jnp(u, spec, steps=steps, block_rows=br)
 
 
 STENCIL_OP = register(EngineOp(
     name="stencil",
     traits=_traits,
     engines={
-        "vector": functools.partial(stencil_apply, engine="vector"),
-        "matrix": functools.partial(stencil_apply, engine="matrix"),
+        "vector": _engine_fn("vector"),
+        "matrix": _engine_fn("matrix"),
     },
     reference=_reference,
     make_inputs=_make_inputs,
     bench_sizes=(128, 256),
     test_size=48,
     doc="|S|-point stencil, t fused steps; I_t = t*|S|/D (paper Eq. 13)",
+    tile_space=STENCIL_TILE_SPACE,
+    tile_defaults={"block_rows": DEFAULT_BLOCK_ROWS},
+    tune_proxy=_tune_proxy,
 ))
 
 
 def stencil(u: jnp.ndarray, spec: StencilSpec, *, steps: int = 1,
-            engine: str = "auto", block_rows: int = 128,
+            engine: str = "auto", block_rows: int = None,
             interpret: bool = True) -> jnp.ndarray:
     """Apply `spec` for `steps` fused timesteps.
 
     'auto' consults the advisor with the *temporally blocked* intensity
     I_t = t * |S| / D (paper Eq. 13): shallow blocking stays memory-bound
-    (vector engine), deep blocking can cross the knee.
+    (vector engine), deep blocking can cross the knee.  ``block_rows``
+    is the leading-axis tile height; None lets the dispatch layer apply
+    a tuned value (or the static default of 128).
     """
-    return STENCIL_OP(u, spec, steps=steps, block_rows=block_rows,
-                      engine=engine, interpret=interpret)
+    kwargs = {} if block_rows is None else {"block_rows": block_rows}
+    return STENCIL_OP(u, spec, steps=steps, engine=engine,
+                      interpret=interpret, **kwargs)

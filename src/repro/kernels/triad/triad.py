@@ -34,12 +34,16 @@ def _triad_mxu_kernel(q_ref, b_ref, c_ref, o_ref):
 
 
 def triad_vector(b: jnp.ndarray, c: jnp.ndarray, q, *,
-                 interpret: bool = True) -> jnp.ndarray:
+                 interpret: bool = True, block_rows: int = None,
+                 lanes: int = None) -> jnp.ndarray:
     return elementwise_call(_triad_vpu_kernel, (b, c), (q,),
-                            interpret=interpret)
+                            interpret=interpret, block_rows=block_rows,
+                            lanes=lanes)
 
 
 def triad_matrix(b: jnp.ndarray, c: jnp.ndarray, q, *,
-                 interpret: bool = True) -> jnp.ndarray:
+                 interpret: bool = True, block_rows: int = None,
+                 lanes: int = None) -> jnp.ndarray:
     return elementwise_call(_triad_mxu_kernel, (b, c), (q,),
-                            interpret=interpret)
+                            interpret=interpret, block_rows=block_rows,
+                            lanes=lanes)

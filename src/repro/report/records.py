@@ -7,7 +7,10 @@ accepted:
 * schema 1 (legacy) -- a bare JSON list of record dicts,
 * schema 2 -- ``{"schema": 2, "kernel": ..., "env": {...},
   "records": [...]}`` with environment metadata (jax version, device
-  kind, interpret flag, hardware model).
+  kind, interpret flag, hardware model),
+* schema 3 -- schema 2 plus an optional per-record ``tile_config``
+  (the tuned tile params a sweep point launched with, and the tuner's
+  tuned-vs-default timings; null = static tile defaults).
 
 Each record is one (kernel, engine, size, dtype) sweep point carrying
 the measured reference time, the max error vs. the oracle, and the
@@ -53,11 +56,33 @@ class BenchRecord:
     pred_us_v5e: Optional[float] = None  # Q / mem_bw analytic floor
     iqr_us: Optional[float] = None       # timing spread (schema 2)
     iters: Optional[int] = None          # timing iterations (schema 2)
+    # schema 3: tuned tile params + tuner timings ({"params": {...},
+    # "tuned_us": ..., "default_us": ..., "source": ...}); None means
+    # the launch used the family's static tile defaults
+    tile_config: Optional[Mapping[str, Any]] = None
 
     @property
     def point(self) -> Tuple[str, str, int, str]:
         """The sweep-point key (kernel, engine, size, dtype)."""
         return (self.kernel, self.engine, self.size, self.dtype)
+
+    @property
+    def tile_params(self) -> Optional[Mapping[str, int]]:
+        """The tuned tile params this point launched with, if any."""
+        if not self.tile_config:
+            return None
+        return self.tile_config.get("params")
+
+    @property
+    def tuned_speedup(self) -> Optional[float]:
+        """Tuner-measured default_us / tuned_us for this point's config."""
+        if not self.tile_config:
+            return None
+        tuned = self.tile_config.get("tuned_us")
+        default = self.tile_config.get("default_us")
+        if not tuned or not default or tuned <= 0:
+            return None
+        return float(default) / float(tuned)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +101,13 @@ def _to_record(raw: Mapping[str, Any], path: str) -> BenchRecord:
     if missing:
         raise ValueError(f"{path}: record missing fields {missing}; "
                          f"got {sorted(raw)}")
+    tile_config = raw.get("tile_config")
+    if tile_config is not None:
+        if not isinstance(tile_config, Mapping) or \
+                not isinstance(tile_config.get("params"), Mapping):
+            raise ValueError(f"{path}: tile_config must be an object "
+                             f"with a 'params' map, got {tile_config!r}")
+        tile_config = dict(tile_config)
     return BenchRecord(
         kernel=str(raw["kernel"]),
         engine=str(raw["engine"]),
@@ -93,11 +125,12 @@ def _to_record(raw: Mapping[str, Any], path: str) -> BenchRecord:
                 if raw.get("iqr_us") is not None else None),
         iters=(int(raw["iters"])
                if raw.get("iters") is not None else None),
+        tile_config=tile_config,
     )
 
 
 def load_file(path: str) -> RecordSet:
-    """Parse one BENCH_<kernel>.json (schema 1 or 2) into a RecordSet.
+    """Parse one BENCH_<kernel>.json (schema 1, 2, or 3) into a RecordSet.
 
     Raises ``ValueError`` on unknown schema versions or records missing
     the fields the claim checks (Eq. 23/24 ceiling, §6 routing) need.
@@ -108,9 +141,9 @@ def load_file(path: str) -> RecordSet:
         schema, env, raw_records = 1, {}, payload
     elif isinstance(payload, dict):
         schema = int(payload.get("schema", 0))
-        if schema != 2:
+        if schema not in (2, 3):
             raise ValueError(f"{path}: unsupported schema {schema!r} "
-                             f"(expected 1-list or 2)")
+                             f"(expected 1-list, 2, or 3)")
         env = dict(payload.get("env", {}))
         raw_records = payload.get("records")
         if not isinstance(raw_records, list):

@@ -1,0 +1,28 @@
+"""Tile-configuration autotuning for the engine-dispatch runtime.
+
+The paper's thesis — memory-bound kernels live or die by bandwidth
+saturation, not by which engine computes them (§6) — only holds weight
+if the baseline actually saturates bandwidth.  A hardcoded tile shape
+cannot claim that for every kernel family, dtype, and hardware model,
+so this package searches the per-family tile space and persists the
+winners:
+
+* :mod:`repro.tuning.cache` — the versioned ``tuned.json`` store
+  (schema, environment fingerprint, merge semantics) consulted by
+  ``repro.core.dispatch.TuningPolicy``.
+* :mod:`repro.tuning.tuner` — the search: enumerate a family's
+  ``tile_space``, time each candidate, keep the fastest.
+* :mod:`repro.tuning.proxy` — pure-XLA timing proxies that reproduce
+  the tiling pipeline without Pallas interpret mode (whose wall times
+  measure the emulator, not the hardware).
+
+CLI entry point: ``python -m benchmarks.run tune``.
+"""
+from .cache import (CACHE_SCHEMA, InterpretTimingError, TunedEntry,
+                    TuningCache, env_fingerprint)
+from .tuner import candidates, default_params, tune_op
+
+__all__ = [
+    "CACHE_SCHEMA", "InterpretTimingError", "TunedEntry", "TuningCache",
+    "candidates", "default_params", "env_fingerprint", "tune_op",
+]

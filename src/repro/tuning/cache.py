@@ -1,0 +1,266 @@
+"""Versioned ``tuned.json`` cache of winning tile configurations.
+
+One :class:`TunedEntry` per (kernel family, engine, dtype, hardware
+model) — the granularity at which a tile choice is transferable: array
+*values* never move a kernel on the roofline (paper §2.3) and the sweep
+sizes share one bandwidth regime, so the cache deliberately does not
+key on size.
+
+File format (schema 1)::
+
+    {
+      "schema": 1,
+      "fingerprint": {"jax": ..., "numpy": ..., "device": ..., ...},
+      "entries": [
+        {"kernel": "scale", "engine": "vector", "dtype": "float32",
+         "hw_model": "TPU-v5e", "params": {"block_rows": 128,
+         "lanes": 512}, "best_us": 410.2, "default_us": 512.9,
+         "size": 4194304, "source": "xla-proxy", "budget": 8}, ...
+      ]
+    }
+
+Load rules (the dispatch layer must never crash because a cache file
+is bad): corrupted JSON, an unknown schema, or a malformed entry list
+degrade to an *empty* cache with a :class:`TuningCacheWarning` —
+dispatch then falls back to the static tile defaults.  A fingerprint
+that does not match the running environment also warns (the entries
+were tuned elsewhere and are advisory) but is still used: a stale
+tuned tile is a performance hint, not a correctness hazard, because
+every consumer re-validates configs against the family's declared
+``tile_space``.
+
+Merge semantics (``TuningCache.merge``): entries present on either
+side survive; when both sides carry the same key the *faster* entry
+(lower ``best_us``) wins, so repeated ``--out tuned.json`` runs only
+ever tighten the cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import warnings
+from typing import Any, Dict, Iterable, Mapping, Optional, Tuple
+
+__all__ = [
+    "CACHE_SCHEMA", "InterpretTimingError", "TunedEntry", "TuningCache",
+    "TuningCacheWarning", "env_fingerprint",
+]
+
+#: Version of the tuned.json file format.
+CACHE_SCHEMA = 1
+
+#: Entry ``source`` tag meaning "timed via the pure-XLA tiling proxy".
+SOURCE_PROXY = "xla-proxy"
+#: Entry ``source`` tag meaning "timed via real (non-interpret) Pallas".
+SOURCE_PALLAS = "pallas"
+#: Entry ``source`` tag for interpret-mode Pallas timings.  Never
+#: persisted: interpret wall times measure the emulator's Python loop,
+#: so a tile choice based on them is noise.
+SOURCE_PALLAS_INTERPRET = "pallas-interpret"
+
+Key = Tuple[str, str, str, str]  # (kernel, engine, dtype, hw_model)
+
+
+class TuningCacheWarning(UserWarning):
+    """A tuned.json could not be used (corrupt, wrong schema, stale env)."""
+
+
+class InterpretTimingError(RuntimeError):
+    """Refusal to persist tile choices based on interpret-mode timings."""
+
+
+def env_fingerprint() -> Dict[str, str]:
+    """The environment a cache's timings were taken in.
+
+    Recorded at save time and compared at load time: tile winners are
+    hardware- and toolchain-sensitive, so a cache tuned under a
+    different jax/device is flagged as advisory.
+    """
+    import platform
+
+    import jax
+    import numpy
+
+    return {
+        "jax": jax.__version__,
+        "numpy": numpy.__version__,
+        "device": jax.devices()[0].platform,
+        "python": platform.python_version(),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedEntry:
+    """One winning tile configuration for (kernel, engine, dtype, hw).
+
+    ``params`` are the keyword arguments the family's engine entry
+    points accept (e.g. ``{"block_rows": 128, "lanes": 512}``);
+    ``best_us`` / ``default_us`` are the tuner's median wall times for
+    the winner and for the static default, so consumers can render the
+    tuned-vs-default delta without re-measuring.
+    """
+
+    kernel: str
+    engine: str
+    dtype: str
+    hw_model: str
+    params: Mapping[str, int]
+    best_us: float
+    default_us: float
+    size: int          # input size the search timed
+    source: str = SOURCE_PROXY
+    budget: int = 0    # candidate budget the search ran under
+
+    @property
+    def key(self) -> Key:
+        """The cache key (kernel, engine, dtype, hw_model)."""
+        return (self.kernel, self.engine, self.dtype, self.hw_model)
+
+    @property
+    def speedup(self) -> float:
+        """default_us / best_us — how much the tuned tile gains."""
+        return self.default_us / self.best_us if self.best_us > 0 else 1.0
+
+    def to_json(self) -> Dict[str, Any]:
+        """The entry as a plain JSON-serializable dict."""
+        d = dataclasses.asdict(self)
+        d["params"] = {k: int(v) for k, v in sorted(self.params.items())}
+        return d
+
+    @classmethod
+    def from_json(cls, raw: Mapping[str, Any]) -> "TunedEntry":
+        """Parse one entry dict; raises on missing fields / bad types."""
+        return cls(
+            kernel=str(raw["kernel"]), engine=str(raw["engine"]),
+            dtype=str(raw["dtype"]), hw_model=str(raw["hw_model"]),
+            params={str(k): int(v)
+                    for k, v in dict(raw["params"]).items()},
+            best_us=float(raw["best_us"]),
+            default_us=float(raw["default_us"]),
+            size=int(raw["size"]), source=str(raw.get("source",
+                                                      SOURCE_PROXY)),
+            budget=int(raw.get("budget", 0)),
+        )
+
+
+class TuningCache:
+    """In-memory tuned-tile store with load/save/merge semantics."""
+
+    def __init__(self, entries: Iterable[TunedEntry] = (),
+                 fingerprint: Optional[Mapping[str, str]] = None):
+        self._entries: Dict[Key, TunedEntry] = {}
+        self.fingerprint = dict(fingerprint) if fingerprint else {}
+        for e in entries:
+            self.add(e)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __iter__(self):
+        return iter(sorted(self._entries.values(),
+                           key=lambda e: e.key))
+
+    def add(self, entry: TunedEntry) -> TunedEntry:
+        """Insert one entry (last write wins for its key).
+
+        Raises :class:`InterpretTimingError` for interpret-mode-sourced
+        entries: interpret wall times measure the Pallas emulator, so a
+        tile chosen by them must never be persisted or consulted.
+        """
+        if entry.source == SOURCE_PALLAS_INTERPRET:
+            raise InterpretTimingError(
+                f"{'/'.join(entry.key)}: timings came from interpret-mode "
+                "Pallas, which measures the emulator's Python loop rather "
+                "than the hardware; refusing to cache this tile choice. "
+                "Time the pure-XLA proxy (the default) or run on a real "
+                "TPU with interpret=False.")
+        self._entries[entry.key] = entry
+        return entry
+
+    def lookup(self, kernel: str, engine: str, dtype: str,
+               hw_model: str) -> Optional[TunedEntry]:
+        """The winning entry for this key, or None (use static defaults)."""
+        return self._entries.get((kernel, engine, dtype, hw_model))
+
+    def merge(self, other: "TuningCache") -> "TuningCache":
+        """Fold *other* into self: faster ``best_us`` wins per key.
+
+        Entries only one side knows survive unconditionally, so
+        repeated tuning runs with partial kernel coverage accumulate
+        into one cache instead of clobbering each other.
+        """
+        for entry in other:
+            mine = self._entries.get(entry.key)
+            if mine is None or entry.best_us < mine.best_us:
+                self._entries[entry.key] = entry
+        if other.fingerprint:
+            self.fingerprint = dict(other.fingerprint)
+        return self
+
+    # -- persistence -------------------------------------------------------
+
+    def save(self, path: str) -> str:
+        """Write the cache as schema-1 tuned.json (merging is caller's
+        job: see ``load_or_warn`` + ``merge``)."""
+        payload = {
+            "schema": CACHE_SCHEMA,
+            "fingerprint": self.fingerprint or env_fingerprint(),
+            "entries": [e.to_json() for e in self],
+        }
+        parent = os.path.dirname(path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "TuningCache":
+        """Strict load: raises ValueError/OSError on any problem."""
+        with open(path) as f:
+            payload = json.load(f)
+        if not isinstance(payload, dict):
+            raise ValueError(f"{path}: expected an object, got "
+                             f"{type(payload).__name__}")
+        schema = payload.get("schema")
+        if schema != CACHE_SCHEMA:
+            raise ValueError(f"{path}: unsupported tuned.json schema "
+                             f"{schema!r} (this build reads "
+                             f"{CACHE_SCHEMA})")
+        raw_entries = payload.get("entries")
+        if not isinstance(raw_entries, list):
+            raise ValueError(f"{path}: missing its 'entries' list")
+        entries = [TunedEntry.from_json(r) for r in raw_entries]
+        return cls(entries, fingerprint=payload.get("fingerprint"))
+
+    @classmethod
+    def load_or_warn(cls, path: str) -> "TuningCache":
+        """Forgiving load for the dispatch path: never raises.
+
+        A missing, corrupted, or version-mismatched file degrades to an
+        empty cache with a :class:`TuningCacheWarning`, so dispatch
+        falls back to the static tile defaults instead of crashing.  A
+        fingerprint from a different environment also warns but the
+        entries are kept (advisory tile hints; correctness is
+        re-validated downstream against each family's ``tile_space``).
+        """
+        try:
+            cache = cls.load(path)
+        except (OSError, ValueError, KeyError, TypeError) as exc:
+            warnings.warn(
+                f"ignoring tuned cache {path!r} ({exc}); dispatch falls "
+                "back to static tile defaults", TuningCacheWarning,
+                stacklevel=2)
+            return cls()
+        current = env_fingerprint()
+        stale = {k: (v, current.get(k)) for k, v in
+                 cache.fingerprint.items()
+                 if k in current and current[k] != v}
+        if stale:
+            warnings.warn(
+                f"tuned cache {path!r} was recorded under a different "
+                f"environment ({stale}); its tile choices are advisory",
+                TuningCacheWarning, stacklevel=2)
+        return cache

@@ -1,0 +1,79 @@
+"""Pure-XLA timing proxies for tile-configuration search.
+
+Off-TPU, Pallas kernels only run in interpret mode, whose wall time
+measures the emulator's Python loop — meaningless for tile choice (and
+the cache refuses to persist it, see
+:class:`repro.tuning.cache.InterpretTimingError`).  The established
+measurement methodology of this repo (``benchmarks.bench_kernels``)
+times XLA-CPU computations instead; this module extends that to
+*tile-shaped* XLA-CPU computations: each proxy reproduces a family's
+flatten → pad → tile → loop pipeline with plain ``jax.numpy`` ops, so
+padding waste and per-tile loop overhead — the things a tile choice
+actually changes — show up in real compiled wall time.
+
+On a real TPU the tuner can instead time the Pallas kernels themselves
+(``source='pallas'`` with ``interpret=False``); the proxies are the
+portable default.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.dispatch import ELEMENTWISE_BLOCK_ROWS, ELEMENTWISE_LANES
+
+__all__ = ["pad_to_tiles", "tile_grid", "tiled_elementwise"]
+
+
+def pad_to_tiles(a: jnp.ndarray, block_rows: int,
+                 lanes: int) -> jnp.ndarray:
+    """Flatten + zero-pad *a* into (n_tiles, block_rows, lanes).
+
+    The same round trip ``repro.core.dispatch.elementwise_call``
+    performs before its ``pallas_call``, so a proxy timed over these
+    tiles pays the same padding waste the kernel would.
+    """
+    flat = a.reshape(-1)
+    tile = block_rows * lanes
+    pad = (-flat.size) % tile
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, block_rows, lanes)
+
+
+@functools.partial(jax.jit, static_argnames=("body", "block_rows",
+                                             "lanes", "n_scalars"))
+def _tiled_elementwise(body, block_rows, lanes, n_scalars, *operands):
+    scalars, arrays = operands[:n_scalars], operands[n_scalars:]
+    tiles = tuple(pad_to_tiles(a, block_rows, lanes) for a in arrays)
+    return jax.lax.map(lambda ts: body(scalars, *ts), tiles)
+
+
+def tiled_elementwise(body: Callable, arrays: Sequence[jnp.ndarray],
+                      scalars: Sequence = (), *,
+                      block_rows: int = ELEMENTWISE_BLOCK_ROWS,
+                      lanes: int = ELEMENTWISE_LANES) -> jnp.ndarray:
+    """Run ``body(scalars, *tile_arrays)`` over every (block_rows, lanes)
+    tile of same-shape *arrays* with ``jax.lax.map``.
+
+    The elementwise proxy: trip count and padding both follow the tile
+    config, so its XLA-CPU wall time ranks candidates the way the real
+    grid launch would rank them on hardware.  *body* must be a
+    module-level function (it is a static jit argument).
+    """
+    scalars = tuple(jnp.asarray(s, jnp.float32) for s in scalars)
+    return _tiled_elementwise(body, int(block_rows), int(lanes),
+                              len(scalars), *scalars, *tuple(arrays))
+
+
+def tile_grid(shape: Tuple[int, ...], block_rows: int,
+              lanes: int) -> int:
+    """Number of (block_rows, lanes) tiles an elementwise launch needs."""
+    n = 1
+    for s in shape:
+        n *= s
+    tile = block_rows * lanes
+    return -(-n // tile)

@@ -1,6 +1,8 @@
 """Benchmark-utility tests: CSV escaping in emit (derived fields with
 commas must survive a csv round trip), time_fn's median/IQR statistics,
-and the schema-2 write_json wrapper."""
+the schema-3 write_json wrapper, and the compare gate's per-kernel
+summary table (a red CI log must be actionable, not just the first
+violation)."""
 import csv
 import io
 import json
@@ -47,15 +49,107 @@ def test_time_fn_returns_median_iqr_iters():
     assert t.iters == 7
 
 
-def test_write_json_schema2(tmp_path):
+def test_write_json_schema3(tmp_path):
     recs = [{"kernel": "demo", "engine": "vector", "size": 8,
-             "dtype": "float32", "ref_us_per_call": 1.0}]
+             "dtype": "float32", "ref_us_per_call": 1.0,
+             "tile_config": None}]
     env = bench_env(interpret=True, hw_model="TPU-v5e")
     path = write_json("demo", recs, out_dir=str(tmp_path), env=env)
     payload = json.loads(open(path).read())
-    assert payload["schema"] == SCHEMA_VERSION
+    assert payload["schema"] == SCHEMA_VERSION == 3
     assert payload["kernel"] == "demo"
     assert payload["records"] == recs
     for key in ("jax", "numpy", "device", "interpret", "hw_model"):
         assert key in payload["env"]
     assert payload["env"]["hw_model"] == "TPU-v5e"
+
+
+# -- compare gate summary table ---------------------------------------------
+
+def _raw_record(**overrides):
+    rec = {
+        "kernel": "scale", "engine": "vector", "size": 1024,
+        "dtype": "float32", "ref_us_per_call": 100.0, "max_err": 0.0,
+        "intensity": 0.125, "memory_bound": True,
+        "engine_auto": "vector", "mxu_ceiling": 1.0,
+    }
+    rec.update(overrides)
+    return rec
+
+
+def _write_set(path, records, kernel="scale"):
+    payload = {"schema": 2, "kernel": kernel,
+               "env": {"hw_model": "TPU-v5e"}, "records": records}
+    path.write_text(json.dumps(payload))
+
+
+def test_compare_summary_table_counts_per_kernel(tmp_path):
+    from benchmarks.compare import gate
+
+    base, cand = tmp_path / "base", tmp_path / "cand"
+    base.mkdir(), cand.mkdir()
+    _write_set(base / "BENCH_scale.json",
+               [_raw_record(), _raw_record(engine="matrix")])
+    _write_set(base / "BENCH_triad.json",
+               [_raw_record(kernel="triad")], kernel="triad")
+    # scale: one point 3x slower + one dropped; triad: a claim violation
+    _write_set(cand / "BENCH_scale.json",
+               [_raw_record(ref_us_per_call=300.0)])
+    _write_set(cand / "BENCH_triad.json",
+               [_raw_record(kernel="triad", mxu_ceiling=1.9)],
+               kernel="triad")
+    result = gate(str(base), str(cand))
+    assert len(result.failures) == 3  # every failure, not just the first
+    kinds = sorted((f.kind, f.kernel) for f in result.failures)
+    assert kinds == [("claim", "triad"), ("missing", "scale"),
+                     ("perf", "scale")]
+
+    table = result.summary_table()
+    assert table[0].split() == ["kernel", "compared", "missing", "perf",
+                                "claims", "status"]
+    rows = {line.split()[0]: line.split() for line in table[1:]}
+    assert rows["scale"] == ["scale", "1", "1", "1", "0", "FAIL"]
+    assert rows["triad"] == ["triad", "1", "0", "0", "1", "FAIL"]
+
+
+def test_compare_summary_table_marks_clean_kernels(tmp_path):
+    from benchmarks.compare import gate
+
+    base, cand = tmp_path / "base", tmp_path / "cand"
+    base.mkdir(), cand.mkdir()
+    for d in (base, cand):
+        _write_set(d / "BENCH_scale.json", [_raw_record()])
+        _write_set(d / "BENCH_triad.json",
+                   [_raw_record(kernel="triad", ref_us_per_call=1.0
+                                if d is base else 10.0)],
+                   kernel="triad")
+    result = gate(str(base), str(cand))
+    rows = {line.split()[0]: line.split()
+            for line in result.summary_table()[1:]}
+    assert rows["scale"][-1] == "pass"   # blast radius is visible:
+    assert rows["triad"][-1] == "FAIL"   # clean kernels listed too
+
+
+def test_compare_main_exits_nonzero_with_table(tmp_path, capsys):
+    from benchmarks.compare import main
+
+    base, cand = tmp_path / "base", tmp_path / "cand"
+    base.mkdir(), cand.mkdir()
+    _write_set(base / "BENCH_scale.json",
+               [_raw_record(), _raw_record(engine="matrix")])
+    _write_set(cand / "BENCH_scale.json", [_raw_record()])
+    assert main([str(base), str(cand)]) == 1
+    err = capsys.readouterr().err
+    assert "per-kernel summary" in err
+    assert "FAIL" in err and "status" in err
+
+
+def test_compare_main_passes_identical(tmp_path, capsys):
+    from benchmarks.compare import main
+
+    base, cand = tmp_path / "base", tmp_path / "cand"
+    base.mkdir(), cand.mkdir()
+    for d in (base, cand):
+        _write_set(d / "BENCH_scale.json", [_raw_record()])
+    assert main([str(base), str(cand)]) == 0
+    assert "gate passed" in capsys.readouterr().out

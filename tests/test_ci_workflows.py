@@ -1,0 +1,101 @@
+"""Structural validation of the GitHub Actions workflows (the
+actionlint-equivalent gate runnable in this container): both workflows
+must parse as YAML and carry the shapes CI correctness depends on —
+the split lint+unit/slow matrix with cancel-in-progress on PRs, and
+the scheduled nightly sweep + tune job with artifact upload."""
+import pathlib
+
+import pytest
+import yaml
+
+WORKFLOWS = pathlib.Path(__file__).resolve().parent.parent / \
+    ".github" / "workflows"
+
+
+def _load(name):
+    wf = yaml.safe_load((WORKFLOWS / name).read_text())
+    assert isinstance(wf, dict), name
+    return wf
+
+
+def _on(wf):
+    # YAML 1.1 parses the bare key `on` as boolean True
+    return wf.get("on", wf.get(True))
+
+
+def _run_text(job):
+    return "\n".join(s.get("run", "") for s in job["steps"])
+
+
+@pytest.mark.parametrize("name", ["ci.yml", "nightly.yml"])
+def test_workflow_is_structurally_valid(name):
+    """Every job has runs-on + timeout, every step has uses xor run."""
+    wf = _load(name)
+    assert _on(wf), f"{name}: no triggers"
+    assert wf.get("jobs"), f"{name}: no jobs"
+    for jname, job in wf["jobs"].items():
+        assert "runs-on" in job, f"{name}:{jname} missing runs-on"
+        assert "timeout-minutes" in job, f"{name}:{jname} missing timeout"
+        assert job.get("steps"), f"{name}:{jname} has no steps"
+        for i, step in enumerate(job["steps"]):
+            has_uses, has_run = "uses" in step, "run" in step
+            assert has_uses != has_run, \
+                f"{name}:{jname} step {i} needs exactly one of uses/run"
+
+
+def test_ci_matrix_split():
+    wf = _load("ci.yml")
+    jobs = wf["jobs"]
+    assert set(jobs) == {"lint-unit", "slow"}
+
+    lint = jobs["lint-unit"]
+    matrix = lint["strategy"]["matrix"]["python-version"]
+    assert matrix == ["3.10", "3.11", "3.12"]
+    runs = _run_text(lint)
+    # the fast job must exclude the distributed suite and lint the tree
+    assert "--ignore=tests/test_distributed.py" in runs
+    assert "ruff check" in runs
+    assert "ruff format --check" in runs
+    # ... and still regenerate + drift-check the claims report
+    assert "benchmarks.run report" in runs
+    assert "git diff --exit-code REPORT.md" in runs
+
+    slow = jobs["slow"]
+    assert "tests/test_distributed.py" in _run_text(slow)
+    # the fast job must NOT run the full tier-1 suite (that is the
+    # point of the split)
+    assert "pytest -q\n" not in runs + "\n"
+
+
+def test_ci_cancels_superseded_pr_runs():
+    wf = _load("ci.yml")
+    conc = wf["concurrency"]
+    assert "github.ref" in conc["group"]
+    assert "cancel-in-progress" in conc
+    assert "pull_request" in str(conc["cancel-in-progress"])
+
+
+def test_ci_pr_gate_uses_tuned_cache():
+    runs = _run_text(_load("ci.yml")["jobs"]["lint-unit"])
+    assert "--tuned tuned.json" in runs
+    assert "benchmarks.compare runs runs-ci" in runs
+
+
+def test_nightly_schedule_and_artifacts():
+    wf = _load("nightly.yml")
+    on = _on(wf)
+    crons = [s["cron"] for s in on["schedule"]]
+    assert crons and all(len(c.split()) == 5 for c in crons)
+    assert "workflow_dispatch" in on
+
+    job = wf["jobs"]["sweep-and-tune"]
+    runs = _run_text(job)
+    # full sweep + regression gate + budget-capped tune smoke
+    assert "benchmarks.run kernels --tuned tuned.json" in runs
+    assert "benchmarks.compare runs runs-nightly" in runs
+    assert "benchmarks.run tune --budget" in runs
+    uploads = [s for s in job["steps"]
+               if "upload-artifact" in s.get("uses", "")]
+    assert uploads and uploads[0].get("if") == "always()"
+    path = uploads[0]["with"]["path"]
+    assert "tuned-nightly.json" in path and "compare-gate.txt" in path

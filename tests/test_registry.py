@@ -111,11 +111,9 @@ def test_stencil_advice_sees_temporal_blocking():
     """Deep temporal blocking crosses the knee: the advisor must flip
     from vector to matrix as I_t = t*|S|/D grows (paper Eq. 13/14)."""
     op = registry.get("stencil")
-    (u, spec), kw = _inputs(op)
-    shallow = DEFAULT_DISPATCHER.advise(op, u, spec, steps=1,
-                                        block_rows=kw["block_rows"])
-    deep = DEFAULT_DISPATCHER.advise(op, u, spec, steps=64,
-                                     block_rows=kw["block_rows"])
+    (u, spec), _kw = _inputs(op)
+    shallow = DEFAULT_DISPATCHER.advise(op, u, spec, steps=1)
+    deep = DEFAULT_DISPATCHER.advise(op, u, spec, steps=64)
     assert shallow.memory_bound
     assert not deep.memory_bound
     assert deep.engine == "matrix"

@@ -45,17 +45,44 @@ def _write_set(path, records, schema=2, kernel="scale"):
 
 # -- ingestion --------------------------------------------------------------
 
-def test_load_committed_runs_schema2():
+def test_load_committed_runs_schema3():
     sets = load_dir(str(RUNS))
     assert [s.kernel for s in sets] == sorted(s.kernel for s in sets)
     assert {s.kernel for s in sets} >= {"attention", "axpy", "scale",
                                         "spmv", "stencil", "triad"}
+    tuned_points = 0
     for s in sets:
-        assert s.schema == 2
+        assert s.schema == 3
         assert "jax" in s.env and "device" in s.env
         assert s.env["interpret"] is True
         for rec in s.records:
             assert rec.iters and rec.iqr_us is not None
+            if rec.tile_config is not None:
+                assert rec.tile_params  # params map present + non-empty
+                tuned_points += 1
+    # the committed baseline was swept with tuned tiles: every family
+    # with a tile space contributes tuned sweep points
+    assert tuned_points > 0
+
+
+def test_load_schema3_tile_config(tmp_path):
+    p = tmp_path / "BENCH_scale.json"
+    cfg = {"params": {"block_rows": 128, "lanes": 512},
+           "tuned_us": 10.0, "default_us": 15.0, "source": "xla-proxy"}
+    payload = {"schema": 3, "kernel": "scale", "env": {},
+               "records": [_raw(tile_config=cfg), _raw(engine="matrix")]}
+    p.write_text(json.dumps(payload))
+    rs = load_file(str(p))
+    assert rs.schema == 3
+    tuned, untuned = rs.records
+    assert tuned.tile_params == {"block_rows": 128, "lanes": 512}
+    assert tuned.tuned_speedup == pytest.approx(1.5)
+    assert untuned.tile_config is None and untuned.tuned_speedup is None
+    # malformed tile_config is rejected, not silently dropped
+    payload["records"] = [_raw(tile_config={"tuned_us": 1.0})]
+    p.write_text(json.dumps(payload))
+    with pytest.raises(ValueError, match="tile_config"):
+        load_file(str(p))
 
 
 def test_load_schema1_legacy_list(tmp_path):
@@ -177,6 +204,26 @@ def test_committed_report_is_current():
     for rs in recsets:
         page = REPO / "docs" / "benchmarks" / f"{rs.kernel}.md"
         assert page.read_text() == render_kernel_page(rs), page
+
+
+def test_report_renders_tuned_deltas(tmp_path):
+    """Kernel pages and REPORT.md show tuned-vs-default tile evidence."""
+    runs = tmp_path / "runs"
+    runs.mkdir()
+    cfg = {"params": {"block_rows": 128, "lanes": 512},
+           "tuned_us": 10.0, "default_us": 15.0, "source": "xla-proxy"}
+    payload = {"schema": 3, "kernel": "scale", "env": {},
+               "records": [_raw(tile_config=cfg), _raw(engine="matrix")]}
+    (runs / "BENCH_scale.json").write_text(json.dumps(payload))
+    recsets = load_dir(str(runs))
+    report = render_report(recsets)
+    assert "## Tuned tile configurations" in report
+    assert "block_rows=128, lanes=512" in report and "+50.0%" in report
+    page = render_kernel_page(recsets[0])
+    assert "tile config" in page and "tuned Δ" in page
+    assert "block_rows=128, lanes=512" in page and "+50.0%" in page
+    # the untuned record renders em-dashes, not empty cells
+    assert "| — | — |" in page
 
 
 def test_report_flags_violations(tmp_path):

@@ -1,0 +1,290 @@
+"""Tile-autotuning tests: cache round-trip and merge semantics,
+corrupted/version-mismatched tuned.json degrading to static defaults
+with a warning (never a crash), the interpret-mode persist guard, the
+budget-capped search itself, and — the acceptance bar — that
+``benchmarks.run tune`` output is demonstrably consulted by
+``DEFAULT_DISPATCHER``."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dispatch import (DEFAULT_DISPATCHER, Dispatcher,
+                                 TUNED_CACHE_ENV, TuningPolicy)
+from repro.kernels import registry
+from repro.tuning import (CACHE_SCHEMA, InterpretTimingError, TunedEntry,
+                          TuningCache, candidates, default_params,
+                          env_fingerprint, tune_op)
+from repro.tuning.cache import SOURCE_PALLAS_INTERPRET, TuningCacheWarning
+
+HW = DEFAULT_DISPATCHER.hw.name
+
+
+def _entry(**overrides):
+    base = dict(kernel="scale", engine="vector", dtype="float32",
+                hw_model=HW, params={"block_rows": 128, "lanes": 512},
+                best_us=10.0, default_us=15.0, size=4096,
+                source="xla-proxy", budget=4)
+    base.update(overrides)
+    return TunedEntry(**base)
+
+
+# -- cache ------------------------------------------------------------------
+
+def test_cache_round_trip(tmp_path):
+    path = tmp_path / "tuned.json"
+    cache = TuningCache([_entry(), _entry(engine="matrix", best_us=12.0)])
+    cache.save(str(path))
+    loaded = TuningCache.load(str(path))
+    assert len(loaded) == 2
+    got = loaded.lookup("scale", "vector", "float32", HW)
+    assert got == _entry()
+    assert got.params == {"block_rows": 128, "lanes": 512}
+    assert got.speedup == pytest.approx(1.5)
+    payload = json.loads(path.read_text())
+    assert payload["schema"] == CACHE_SCHEMA
+    assert set(payload["fingerprint"]) >= {"jax", "numpy", "device"}
+
+
+def test_cache_merge_faster_wins():
+    a = TuningCache([_entry(best_us=10.0)])
+    b = TuningCache([_entry(best_us=8.0, params={"block_rows": 512,
+                                                 "lanes": 1024}),
+                     _entry(kernel="triad", best_us=3.0)])
+    a.merge(b)
+    assert len(a) == 2
+    assert a.lookup("scale", "vector", "float32", HW).best_us == 8.0
+    # slower incoming entry does not clobber an existing winner
+    a.merge(TuningCache([_entry(best_us=99.0)]))
+    assert a.lookup("scale", "vector", "float32", HW).best_us == 8.0
+
+
+@pytest.mark.parametrize("content", [
+    "not json at all {{{",
+    json.dumps({"schema": 99, "entries": []}),      # version mismatch
+    json.dumps({"schema": CACHE_SCHEMA}),           # no entries list
+    json.dumps([1, 2, 3]),                          # wrong top-level type
+    json.dumps({"schema": CACHE_SCHEMA,
+                "entries": [{"kernel": "scale"}]}),  # malformed entry
+])
+def test_corrupt_cache_degrades_with_warning(tmp_path, content):
+    path = tmp_path / "tuned.json"
+    path.write_text(content)
+    with pytest.warns(TuningCacheWarning):
+        cache = TuningCache.load_or_warn(str(path))
+    assert len(cache) == 0
+
+
+def test_corrupt_cache_never_breaks_dispatch(tmp_path, monkeypatch):
+    """The satellite requirement: a bad tuned.json must fall back to
+    static tile defaults with a warning instead of crashing dispatch."""
+    path = tmp_path / "tuned.json"
+    path.write_text("{corrupt")
+    monkeypatch.setenv(TUNED_CACHE_ENV, str(path))
+    d = Dispatcher()  # fresh dispatcher so the lazy env load runs here
+    op = registry.get("scale")
+    b = jnp.ones(3000, jnp.float32)
+    with pytest.warns(TuningCacheWarning):
+        out = d.run(op, b, 2.0)
+    np.testing.assert_allclose(np.asarray(out), 2.0 * np.ones(3000))
+    assert d.advise(op, b, 2.0).tile_config is None
+
+
+def test_stale_fingerprint_warns_but_keeps_entries(tmp_path):
+    path = tmp_path / "tuned.json"
+    cache = TuningCache([_entry()],
+                        fingerprint={**env_fingerprint(),
+                                     "jax": "0.0.0-elsewhere"})
+    cache.save(str(path))
+    with pytest.warns(TuningCacheWarning, match="different environment"):
+        loaded = TuningCache.load_or_warn(str(path))
+    assert len(loaded) == 1
+
+
+def test_interpret_timings_refused():
+    """Interpret-mode Pallas wall times measure the emulator; the cache
+    must refuse to persist tile choices based on them."""
+    with pytest.raises(InterpretTimingError, match="interpret-mode"):
+        TuningCache().add(_entry(source=SOURCE_PALLAS_INTERPRET))
+
+
+def test_tune_op_pallas_interpret_entry_is_unpersistable():
+    op = registry.get("scale")
+    entry = tune_op(op, engine="vector", dtype="float32", size=2048,
+                    budget=2, source="pallas", interpret=True,
+                    hw_model=HW)
+    assert entry.source == SOURCE_PALLAS_INTERPRET
+    with pytest.raises(InterpretTimingError):
+        TuningCache().add(entry)
+
+
+# -- search -----------------------------------------------------------------
+
+def test_candidates_default_first_and_budget_capped():
+    op = registry.get("scale")
+    grid = candidates(op)
+    assert grid[0] == default_params(op)
+    assert len(grid) == len({tuple(sorted(c.items())) for c in grid})
+    for cfg in grid:
+        assert set(cfg) == set(op.tile_space) == {"block_rows", "lanes"}
+    capped = candidates(op, budget=3)
+    assert len(capped) == 3 and capped[0] == default_params(op)
+
+
+def test_tune_op_smoke():
+    op = registry.get("scale")
+    entry = tune_op(op, engine="vector", dtype="float32", size=2**14,
+                    budget=4, hw_model=HW)
+    assert entry.kernel == "scale" and entry.engine == "vector"
+    assert set(entry.params) == {"block_rows", "lanes"}
+    assert entry.best_us > 0 and entry.default_us >= entry.best_us
+    assert entry.source == "xla-proxy"
+    TuningCache().add(entry)  # persistable
+
+
+def test_tune_op_untunable_family_returns_none():
+    assert tune_op(registry.get("spmv"), engine="vector",
+                   dtype="float32", size=64, budget=2) is None
+
+
+@pytest.mark.parametrize("name", ["stencil", "attention"])
+def test_nonelementwise_proxies_run(name):
+    """The stencil/attention proxies must execute across their whole
+    candidate space (invalid corners may be skipped, not crash)."""
+    op = registry.get(name)
+    entry = tune_op(op, engine="vector", dtype="float32",
+                    size=op.test_size, budget=8, hw_model=HW)
+    assert entry is not None and entry.best_us > 0
+    assert set(entry.params) <= set(op.tile_space)
+
+
+# -- dispatch consultation --------------------------------------------------
+
+def test_dispatcher_consults_cache():
+    cache = TuningCache([_entry(params={"block_rows": 128,
+                                        "lanes": 512})])
+    d = Dispatcher(tuning=TuningPolicy(cache=cache))
+    op = registry.get("scale")
+    b = jnp.asarray(np.random.default_rng(0).standard_normal(5000),
+                    jnp.float32)
+    advice = d.advise(op, b, 1.5)
+    assert advice.tile_config == (("block_rows", 128), ("lanes", 512))
+    out = d.run(op, b, 1.5)
+    np.testing.assert_allclose(np.asarray(out), 1.5 * np.asarray(b),
+                               rtol=1e-6)
+    # a different dtype has no entry: static defaults, no tile_config
+    assert d.advise(op, b.astype(jnp.bfloat16), 1.5).tile_config is None
+
+
+def test_dispatcher_degrades_unknown_cached_tile_params():
+    """A stale cache entry naming parameters this build doesn't know is
+    advisory: dispatch warns, drops the unknown keys, and still runs."""
+    cache = TuningCache([_entry(params={"warp_size": 32,
+                                        "block_rows": 128})])
+    d = Dispatcher(tuning=TuningPolicy(cache=cache))
+    op = registry.get("scale")
+    with pytest.warns(TuningCacheWarning, match="warp_size"):
+        out = d.run(op, jnp.ones(100, jnp.float32), 1.5)
+    np.testing.assert_allclose(np.asarray(out), 1.5 * np.ones(100))
+
+
+def test_explicit_tile_config_wins():
+    op = registry.get("scale")
+    b = jnp.ones(2000, jnp.float32)
+    out = op(b, 3.0, tile_config={"block_rows": 128, "lanes": 512})
+    np.testing.assert_allclose(np.asarray(out), 3.0 * np.ones(2000))
+    with pytest.raises(ValueError, match="does not accept tile"):
+        op(b, 3.0, tile_config={"bogus": 1})
+
+
+def test_explicit_kwargs_beat_cached_config():
+    """A caller-passed tile kwarg must not be silently overridden by
+    the cache (tuned values only fill gaps)."""
+    seen = {}
+
+    def spy(b, q, *, interpret=True, block_rows=None, lanes=None):
+        seen.update(block_rows=block_rows, lanes=lanes)
+        return b
+
+    import dataclasses
+    op = registry.get("scale")
+    spied = dataclasses.replace(op, engines={"vector": spy, "matrix": spy})
+    cache = TuningCache([_entry(params={"block_rows": 128,
+                                        "lanes": 512})])
+    d = Dispatcher(tuning=TuningPolicy(cache=cache))
+    b = jnp.ones(100, jnp.float32)
+    d.run(spied, b, 1.5, block_rows=512)
+    assert seen == {"block_rows": 512, "lanes": 512}  # kwarg won, gap filled
+
+
+# -- CLI + acceptance -------------------------------------------------------
+
+def test_tune_cli_produces_consultable_cache(tmp_path):
+    """Acceptance bar: ``benchmarks.run tune --kernel scale`` writes a
+    tuned.json that DEFAULT_DISPATCHER demonstrably consults."""
+    from benchmarks import tune
+
+    out = tmp_path / "tuned.json"
+    rc = tune.main(["--kernel", "scale", "--budget", "2",
+                    "--size", "8192", "--dtype", "float32",
+                    "--out", str(out)])
+    assert rc == 0 and out.exists()
+    cache = TuningCache.load(str(out))
+    assert cache.lookup("scale", "vector", "float32", HW) is not None
+
+    op = registry.get("scale")
+    b = jnp.asarray(np.random.default_rng(1).standard_normal(4096),
+                    jnp.float32)
+    try:
+        DEFAULT_DISPATCHER.load_tuned(str(out))
+        advice = DEFAULT_DISPATCHER.advise(op, b, 2.5)
+        assert advice.tile_config is not None  # the cache was consulted
+        tuned_params = dict(advice.tile_config)
+        assert tuned_params == dict(
+            cache.lookup("scale", "vector", "float32", HW).params)
+        out_arr = op(b, 2.5)  # and the launch still matches the oracle
+        np.testing.assert_allclose(np.asarray(out_arr),
+                                   2.5 * np.asarray(b), rtol=1e-6)
+    finally:
+        DEFAULT_DISPATCHER.set_tuning_cache(None)
+
+
+def test_tune_cli_merges_existing(tmp_path):
+    from benchmarks import tune
+
+    out = tmp_path / "tuned.json"
+    TuningCache([_entry(kernel="triad", best_us=1e-9)]).save(str(out))
+    rc = tune.main(["--kernel", "scale", "--budget", "2",
+                    "--size", "8192", "--dtype", "float32",
+                    "--out", str(out)])
+    assert rc == 0
+    merged = TuningCache.load(str(out))
+    assert merged.lookup("triad", "vector", "float32", HW) is not None
+    assert merged.lookup("scale", "vector", "float32", HW) is not None
+
+
+def test_tune_cli_refuses_interpret_pallas(tmp_path):
+    """The CLI guard: --time-pallas without real hardware (interpret
+    mode) must refuse to persist, with a clear error."""
+    from benchmarks import tune
+
+    with pytest.raises(SystemExit, match="interpret-mode"):
+        tune.main(["--kernel", "scale", "--budget", "1",
+                   "--size", "2048", "--dtype", "float32",
+                   "--time-pallas", "--out",
+                   str(tmp_path / "tuned.json")])
+    assert not (tmp_path / "tuned.json").exists()
+
+
+def test_committed_tuned_json_is_valid():
+    """The repo-root tuned.json the CI sweep consumes must load
+    strictly and cover every tunable family."""
+    import pathlib
+    path = pathlib.Path(__file__).resolve().parent.parent / "tuned.json"
+    cache = TuningCache.load(str(path))
+    tunable = {op.name for op in registry.all_ops() if op.tile_space}
+    assert {e.kernel for e in cache} == tunable
+    for e in cache:
+        assert e.source == "xla-proxy"
+        assert set(e.params) <= set(registry.get(e.kernel).tile_space)
