@@ -20,8 +20,9 @@ import jax
 # benchmark/test consumers
 from repro.core.timing import Timing, time_fn
 
-__all__ = ["SCHEMA_VERSION", "Timing", "bench_env", "emit", "time_fn",
-           "write_json"]
+__all__ = ["SCHEMA_VERSION", "SERVING_SCHEMA_VERSION", "Timing",
+           "bench_env", "emit", "time_fn", "write_json",
+           "write_serving_json"]
 
 #: Version of the BENCH_<kernel>.json file format.  Schema 1 was a bare
 #: list of records; schema 2 wraps the records with environment
@@ -30,6 +31,12 @@ __all__ = ["SCHEMA_VERSION", "Timing", "bench_env", "emit", "time_fn",
 #: params the launch used plus the tuner's tuned-vs-default timings,
 #: or null when dispatch fell back to static defaults).
 SCHEMA_VERSION = 3
+
+#: Version of the serving record file format (``BENCH_serve_*.json``):
+#: schema 4 marks a ``"kind": "serving"`` set whose records are
+#: latency-percentile/goodput session summaries from
+#: ``repro.serving.metrics.serving_record``.
+SERVING_SCHEMA_VERSION = 4
 
 
 def emit(rows: List[dict], out: Optional[TextIO] = None) -> None:
@@ -59,6 +66,26 @@ def bench_env(interpret: bool = True, hw_model: str = "") -> dict:
     }
 
 
+def _write_record_file(filename: str, kernel: str, schema: int,
+                       records: List[dict], out_dir: str,
+                       env: Optional[dict],
+                       extra: Optional[dict] = None) -> str:
+    """The one serialization convention every record file shares."""
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, filename)
+    payload = {
+        "schema": schema,
+        "kernel": kernel,
+        "env": env if env is not None else {},
+        "records": records,
+        **(extra or {}),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
 def write_json(kernel: str, records: List[dict], out_dir: str = "runs",
                env: Optional[dict] = None) -> str:
     """Write machine-readable per-kernel records to BENCH_<kernel>.json.
@@ -69,15 +96,21 @@ def write_json(kernel: str, records: List[dict], out_dir: str = "runs",
     diffable across PRs and auditable by the ``repro.report`` claim
     checks.
     """
-    os.makedirs(out_dir, exist_ok=True)
-    path = os.path.join(out_dir, f"BENCH_{kernel}.json")
-    payload = {
-        "schema": SCHEMA_VERSION,
-        "kernel": kernel,
-        "env": env if env is not None else {},
-        "records": records,
-    }
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2, sort_keys=True)
-        f.write("\n")
-    return path
+    return _write_record_file(f"BENCH_{kernel}.json", kernel,
+                              SCHEMA_VERSION, records, out_dir, env)
+
+
+def write_serving_json(kernel: str, records: List[dict],
+                       out_dir: str = "runs",
+                       env: Optional[dict] = None) -> str:
+    """Write one kernel's serving sessions to BENCH_serve_<kernel>.json.
+
+    Schema 4: ``{"schema": 4, "kind": "serving", "kernel": ..., "env":
+    {...}, "records": [...]}`` with one record per (engine, workload,
+    size, dtype) session, consumed by ``repro.report`` (serving claim
+    checks + REPORT.md serving section) and gated on p99/goodput by
+    ``benchmarks/compare.py --kind serving``.
+    """
+    return _write_record_file(f"BENCH_serve_{kernel}.json", kernel,
+                              SERVING_SCHEMA_VERSION, records, out_dir,
+                              env, extra={"kind": "serving"})

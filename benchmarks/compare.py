@@ -3,45 +3,61 @@
 Usage::
 
     python -m benchmarks.compare BASELINE_DIR CANDIDATE_DIR \
-        [--threshold 0.25] [--kernels scale,triad]
+        [--threshold 0.25] [--kernels scale,triad] [--kind all]
 
-Compares candidate records against the baseline keyed by (kernel,
-engine, size, dtype) and exits non-zero when
+Compares candidate records against the baseline and exits non-zero
+when
 
-* a candidate's ``ref_us_per_call`` regresses by more than
+* a candidate sweep point's ``ref_us_per_call`` regresses by more than
   ``--threshold`` (fraction; default 0.25 = 25%),
+* a candidate **serving** session's tail latency (``p99_ms``) regresses
+  or its ``goodput_rps`` drops by more than ``--threshold``,
 * any candidate record violates a paper claim (Eq. 23/24 ceiling,
-  §6 routing, oracle accuracy, Eq. 4 boundedness), or
-* a baseline sweep point disappears from the candidate set (lost
-  coverage is a regression too).
+  §6 routing, oracle accuracy, Eq. 4 boundedness — §6-under-load,
+  percentile and goodput consistency for serving records),
+* a joined serving session pair disagrees on its load knobs
+  (rate/duration/SLO/seed — sessions under different offered load are
+  not comparable, so drifted defaults fail loudly instead of gating
+  noise), or
+* a baseline point disappears from the candidate set (lost coverage is
+  a regression too).
 
-``--kernels`` restricts both sides to a comma-separated subset so CI
-can gate on a fast family sweep without re-running every kernel.
-Speed-ups and new sweep points are reported but never fail the gate.
+Bench sweep points join on (kernel, engine, size, dtype); serving
+sessions on (kernel, engine, workload, size, dtype).  ``--kind``
+restricts the gate to one record kind (``bench``/``serving``; default
+``all``) so CI can gate a fast kernel sweep and a serve smoke run
+against different candidate directories.  ``--kernels`` restricts both
+sides to a comma-separated subset.  Speed-ups and new points are
+reported but never fail the gate.
 
 On failure the log ends with a per-kernel summary table (compared
-points, missing points, perf regressions, claim violations, status) so
-a red CI run is diagnosable from its last screenful instead of from
-the first violation alone.
+points, missing points, perf/goodput regressions, claim violations,
+status) so a red CI run is diagnosable from its last screenful instead
+of from the first violation alone.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import sys
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Any, Dict, Iterable, List, Optional, Tuple, Union
 
 from repro.report import check_records, load_dir, violations
-from repro.report.records import BenchRecord, RecordSet
+from repro.report.records import BenchRecord, RecordSet, ServingRecord
 
-Key = Tuple[str, str, int, str]
+# bench points key on (kernel, engine, size, dtype); serving sessions
+# on (kernel, engine, workload, size, dtype) — kernel always leads
+Key = Tuple[Any, ...]
+Record = Union[BenchRecord, ServingRecord]
+
+KINDS = ("all", "bench", "serving")
 
 
 @dataclasses.dataclass(frozen=True)
 class Failure:
     """One gate failure: its kind, the kernel it belongs to, the text."""
 
-    kind: str      # 'empty' | 'missing' | 'perf' | 'claim'
+    kind: str      # 'empty'|'missing'|'perf'|'goodput'|'config'|'claim'
     kernel: str    # '' for cross-kernel failures (empty comparison)
     message: str
 
@@ -66,25 +82,29 @@ class GateResult:
         """
         kernels = sorted(set(self.compared) |
                          {f.kernel for f in self.failures if f.kernel})
-        rows = [("kernel", "compared", "missing", "perf", "claims",
-                 "status")]
+        rows = [("kernel", "compared", "missing", "perf", "goodput",
+                 "config", "claims", "status")]
         for k in kernels:
             counts = {kind: sum(1 for f in self.failures
                                 if f.kernel == k and f.kind == kind)
-                      for kind in ("missing", "perf", "claim")}
+                      for kind in ("missing", "perf", "goodput",
+                                   "config", "claim")}
             status = "FAIL" if any(counts.values()) else "pass"
             rows.append((k, str(self.compared.get(k, 0)),
                          str(counts["missing"]), str(counts["perf"]),
+                         str(counts["goodput"]), str(counts["config"]),
                          str(counts["claim"]), status))
         widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
         return ["  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip()
                 for r in rows]
 
 
-def _index(recsets: Iterable[RecordSet],
-           kernels: Optional[set] = None) -> Dict[Key, BenchRecord]:
-    out: Dict[Key, BenchRecord] = {}
+def _index(recsets: Iterable[RecordSet], which: str,
+           kernels: Optional[set] = None) -> Dict[Key, Record]:
+    out: Dict[Key, Record] = {}
     for rs in recsets:
+        if rs.kind != which:
+            continue
         if kernels is not None and rs.kernel not in kernels:
             continue
         for rec in rs.records:
@@ -92,44 +112,119 @@ def _index(recsets: Iterable[RecordSet],
     return out
 
 
-def gate(baseline_dir: str, candidate_dir: str, threshold: float = 0.25,
-         kernels: Optional[Iterable[str]] = None) -> GateResult:
-    """Run the full gate and return structured per-kernel results."""
-    wanted = set(kernels) if kernels is not None else None
-    base_sets = load_dir(baseline_dir)
-    cand_sets = [rs for rs in load_dir(candidate_dir)
-                 if wanted is None or rs.kernel in wanted]
-    base = _index(base_sets, wanted)
-    cand = _index(cand_sets, wanted)
-    failures: List[Failure] = []
-    if not base:
-        # an over-narrow --kernels filter must not pass vacuously
-        failures.append(Failure(
-            "empty", "",
-            f"empty comparison: no baseline records in {baseline_dir!r} "
-            f"match kernels={sorted(wanted) if wanted else 'all'}"))
-
+def _diff_points(base: Dict, cand: Dict, label: str,
+                 failures: List[Failure]) -> List:
+    """Missing-coverage failures + the joined keys both sides share."""
     for key in sorted(set(base) - set(cand)):
         failures.append(Failure(
             "missing", key[0],
-            f"missing: {'/'.join(map(str, key))} present in "
+            f"missing: {label} {'/'.join(map(str, key))} present in "
             f"baseline but absent from candidate"))
     for key in sorted(set(cand) - set(base)):
-        print(f"note: new sweep point {'/'.join(map(str, key))}")
+        print(f"note: new {label} point {'/'.join(map(str, key))}")
+    return sorted(set(base) & set(cand))
 
+
+def _gate_metric(key, old: float, new: float, metric: str, unit: str,
+                 threshold: float, kind: str, failures: List[Failure],
+                 lower_is_better: bool = True) -> None:
+    """One thresholded metric comparison; regressions fail, wins print."""
+    if old <= 0:
+        return
+    # the higher-is-better bound is division-based so it mirrors the
+    # lower-is-better one at any threshold: a 1+t ratio either way
+    # fails (a subtractive 1-t bound would go vacuous at t >= 1, and
+    # CI runs these gates with loose thresholds like 5.0)
+    worse = (new > old * (1.0 + threshold) if lower_is_better
+             else new < old / (1.0 + threshold))
+    better = (new < old / (1.0 + threshold) if lower_is_better
+              else new > old * (1.0 + threshold))
+    if worse:
+        if lower_is_better:
+            evidence = (f"(+{(new / old - 1) * 100:.0f}% > "
+                        f"{threshold * 100:.0f}%)")
+            label = "perf regression"
+        else:
+            # the trigger is ratio-based (new < old/(1+t)): report the
+            # same ratio so the log states a true inequality
+            ratio = old / new if new > 0 else float("inf")
+            evidence = (f"({ratio:.1f}x below baseline > "
+                        f"{1.0 + threshold:.1f}x bound)")
+            label = f"{kind} drop"
+        failures.append(Failure(
+            kind, key[0],
+            f"{label}: {'/'.join(map(str, key))} {metric} "
+            f"{old:.1f} -> {new:.1f} {unit} {evidence}"))
+    elif better:
+        print(f"note: {'/'.join(map(str, key))} {metric} improved "
+              f"{old:.1f} -> {new:.1f} {unit}")
+
+
+def gate(baseline_dir: str, candidate_dir: str, threshold: float = 0.25,
+         kernels: Optional[Iterable[str]] = None,
+         kind: str = "all") -> GateResult:
+    """Run the full gate and return structured per-kernel results.
+
+    ``kind`` selects which record kinds participate: 'bench' sweep
+    points, 'serving' session records, or 'all' (both).
+    """
+    if kind not in KINDS:
+        raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
+    wanted = set(kernels) if kernels is not None else None
+    base_sets = load_dir(baseline_dir)
+    cand_sets = [rs for rs in load_dir(candidate_dir)
+                 if (wanted is None or rs.kernel in wanted)
+                 and kind in ("all", rs.kind)]
+    failures: List[Failure] = []
     compared: Dict[str, int] = {}
-    for key in sorted(set(base) & set(cand)):
-        compared[key[0]] = compared.get(key[0], 0) + 1
-        old, new = base[key].ref_us_per_call, cand[key].ref_us_per_call
-        if old > 0 and new > old * (1.0 + threshold):
-            failures.append(Failure(
-                "perf", key[0],
-                f"perf regression: {'/'.join(map(str, key))} "
-                f"ref_us_per_call {old:.1f} -> {new:.1f} "
-                f"(+{(new / old - 1) * 100:.0f}% > {threshold * 100:.0f}%)"))
-        elif old > 0 and new < old * (1.0 - threshold):
-            print(f"note: {'/'.join(map(str, key))} sped up "
-                  f"{old:.1f} -> {new:.1f} us")
+    empty = True
+
+    if kind in ("all", "bench"):
+        base = _index(base_sets, "bench", wanted)
+        cand = _index(cand_sets, "bench", wanted)
+        empty = empty and not base
+        for key in _diff_points(base, cand, "sweep", failures):
+            compared[key[0]] = compared.get(key[0], 0) + 1
+            _gate_metric(key, base[key].ref_us_per_call,
+                         cand[key].ref_us_per_call, "ref_us_per_call",
+                         "us", threshold, "perf", failures)
+
+    if kind in ("all", "serving"):
+        base = _index(base_sets, "serving", wanted)
+        cand = _index(cand_sets, "serving", wanted)
+        empty = empty and not base
+        for key in _diff_points(base, cand, "serving", failures):
+            compared[key[0]] = compared.get(key[0], 0) + 1
+            # the join key carries no load knobs: refuse to compare
+            # sessions that saw different offered load or SLO -- a
+            # drifted default would otherwise gate p99/goodput across
+            # incomparable traffic (false reds and false greens alike)
+            mismatched = [
+                f"{f}={getattr(base[key], f)} vs {getattr(cand[key], f)}"
+                for f in ("rate_rps", "duration_s", "slo_ms", "seed",
+                          "max_batch", "max_wait_ms")
+                if getattr(base[key], f) != getattr(cand[key], f)]
+            if mismatched:
+                failures.append(Failure(
+                    "config", key[0],
+                    f"config mismatch: {'/'.join(map(str, key))} "
+                    f"sessions are not comparable "
+                    f"({'; '.join(mismatched)})"))
+                continue
+            _gate_metric(key, base[key].p99_ms, cand[key].p99_ms,
+                         "p99_ms", "ms", threshold, "perf", failures)
+            _gate_metric(key, base[key].goodput_rps,
+                         cand[key].goodput_rps, "goodput_rps", "rps",
+                         threshold, "goodput", failures,
+                         lower_is_better=False)
+
+    if empty:
+        # an over-narrow --kernels/--kind filter must not pass vacuously
+        failures.insert(0, Failure(
+            "empty", "",
+            f"empty comparison: no baseline records in {baseline_dir!r} "
+            f"match kernels={sorted(wanted) if wanted else 'all'} "
+            f"kind={kind}"))
 
     for v in violations(check_records(cand_sets)):
         failures.append(Failure(
@@ -140,10 +235,11 @@ def gate(baseline_dir: str, candidate_dir: str, threshold: float = 0.25,
 
 
 def compare(baseline_dir: str, candidate_dir: str, threshold: float = 0.25,
-            kernels: Optional[Iterable[str]] = None) -> List[str]:
+            kernels: Optional[Iterable[str]] = None,
+            kind: str = "all") -> List[str]:
     """Return the list of failure messages (empty = gate passes)."""
     return gate(baseline_dir, candidate_dir, threshold=threshold,
-                kernels=kernels).messages
+                kernels=kernels, kind=kind).messages
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -155,10 +251,14 @@ def main(argv: Optional[List[str]] = None) -> int:
                         "(default 0.25)")
     p.add_argument("--kernels", default=None,
                    help="comma-separated kernel subset to compare")
+    p.add_argument("--kind", default="all", choices=KINDS,
+                   help="record kind to gate: bench sweeps, serving "
+                        "sessions, or all (default)")
     args = p.parse_args(argv)
     kernels = args.kernels.split(",") if args.kernels else None
     result = gate(args.baseline, args.candidate,
-                  threshold=args.threshold, kernels=kernels)
+                  threshold=args.threshold, kernels=kernels,
+                  kind=args.kind)
     for f in result.failures:
         print(f"FAIL: {f.message}", file=sys.stderr)
     if result.failures:

@@ -11,6 +11,9 @@ list to maintain.
   <kernel name>  -- one registered kernel (e.g. ``scale``, ``triad``)
   tune           -- tile-config autotuner -> tuned.json (see
                     ``benchmarks.tune`` for its flags)
+  serve          -- request-level serving sessions (loadgen ->
+                    continuous batching -> latency percentiles; see
+                    ``benchmarks.serve`` for its flags)
   report         -- regenerate REPORT.md + docs/benchmarks/ from runs/
 
 Prints ``name,us_per_call,derived`` CSV rows; kernel sweeps also write
@@ -50,6 +53,11 @@ def main(argv: Optional[List[str]] = None) -> None:
         # the tuner has its own argparse surface (budget, out, ...)
         from . import tune
         raise SystemExit(tune.main(argv[1:]))
+    if argv and argv[0] == "serve":
+        # the serving driver has its own argparse surface (workload,
+        # rate, duration, ...)
+        from . import serve
+        raise SystemExit(serve.main(argv[1:]))
     out_dir, out_given = "runs", "--out" in argv
     if out_given:
         i = argv.index("--out")
@@ -95,7 +103,7 @@ def main(argv: Optional[List[str]] = None) -> None:
         else:
             raise SystemExit(
                 f"unknown benchmark {key!r}; have "
-                f"{sorted(THEORY) + ['kernels', 'report', 'tune'] + sorted(kernel_names)}")
+                f"{sorted(THEORY) + ['kernels', 'report', 'serve', 'tune'] + sorted(kernel_names)}")
 
 
 if __name__ == "__main__":

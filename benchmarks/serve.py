@@ -1,0 +1,136 @@
+"""Serving benchmark: latency-percentile sessions over the dispatcher.
+
+``python -m benchmarks.run serve`` drives the request-level serving
+subsystem (``repro.serving``) against registered kernel families: one
+session per (kernel, engine, workload), each replaying the same seeded
+traffic through the continuous-batching scheduler with the engine
+forced to the vector and then the matrix variant (plus whatever
+``engine='auto'`` resolves to via the memoized Advice — recorded so the
+claims layer can re-check §6 routing under load).
+
+Each kernel's sessions land in ``<out>/BENCH_serve_<kernel>.json``
+(schema 4) for ``python -m benchmarks.run report`` and the
+``benchmarks/compare.py --kind serving`` p99/goodput gate; a summary
+table prints per session.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import List, Optional
+
+from repro.core.dispatch import DEFAULT_DISPATCHER
+from repro.kernels import registry
+from repro.serving import (WORKLOADS, BatchPolicy, SLO, SessionConfig,
+                           run_session)
+
+from .common import bench_env, write_serving_json
+
+#: Families swept by default: the elementwise suite the batcher packs
+#: into fused launches (fast enough for PR CI); ``--kernels all`` sweeps
+#: every registered family through the per-request fallback too.
+DEFAULT_KERNELS = ("scale", "triad", "axpy")
+
+#: Engines each session config is served under.  'auto' is not swept
+#: separately: its resolution is recorded as ``engine_auto`` on every
+#: record, and on memory-bound families it coincides with 'vector'.
+ENGINES = ("vector", "matrix")
+
+
+def _parse(argv: Optional[List[str]]) -> argparse.Namespace:
+    p = argparse.ArgumentParser(
+        prog="benchmarks.run serve", description=__doc__.splitlines()[0])
+    p.add_argument("--workload", default="poisson", choices=WORKLOADS,
+                   help="traffic model (default poisson)")
+    p.add_argument("--rate", type=float, default=64.0,
+                   help="offered rate knob, requests/s (default 64)")
+    p.add_argument("--duration", type=float, default=2.0,
+                   help="session horizon in virtual seconds (default 2)")
+    p.add_argument("--kernels", default=None,
+                   help="comma-separated families, or 'all' "
+                        f"(default {','.join(DEFAULT_KERNELS)})")
+    p.add_argument("--size", type=int, default=65536,
+                   help="per-request elements (default 65536)")
+    p.add_argument("--dtype", default="float32",
+                   help="request dtype (default float32)")
+    p.add_argument("--seed", type=int, default=0,
+                   help="loadgen seed; sessions replay exactly (default 0)")
+    p.add_argument("--max-batch", type=int, default=8,
+                   help="continuous-batching size trigger (default 8)")
+    p.add_argument("--max-wait-ms", type=float, default=20.0,
+                   help="continuous-batching age trigger (default 20)")
+    p.add_argument("--slo-ms", type=float, default=50.0,
+                   help="end-to-end latency SLO (default 50)")
+    p.add_argument("--trace", default=None,
+                   help="JSON trace path (required for --workload trace)")
+    p.add_argument("--tuned", default=None,
+                   help="tuned.json for tile-aware packing/dispatch")
+    p.add_argument("--out", default="runs",
+                   help="record directory (default runs)")
+    return p.parse_args(argv)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = _parse(argv)
+    if args.workload == "trace" and not args.trace:
+        raise SystemExit("--workload trace requires --trace PATH")
+    if args.tuned:
+        DEFAULT_DISPATCHER.load_tuned(args.tuned)
+    explicit = args.kernels is not None and args.kernels != "all"
+    names = (tuple(args.kernels.split(",")) if explicit
+             else registry.names() if args.kernels == "all"
+             else DEFAULT_KERNELS)
+    unknown = sorted(set(names) - set(registry.names()))
+    if unknown:
+        raise SystemExit(f"unknown kernel(s) {unknown}; have "
+                         f"{sorted(registry.names())}")
+    trace = None
+    if args.workload == "trace":
+        # parse the trace once; it names its own kernels, so reconcile
+        # with the sweep list up front instead of crashing mid-sweep on
+        # the first family the trace doesn't cover
+        from repro.serving import TraceLoadGen, load_trace
+        trace = load_trace(args.trace)
+        available = {r.kernel for r in trace.requests}
+        if explicit:
+            missing = sorted(set(names) - available)
+            if missing:
+                raise SystemExit(
+                    f"trace {args.trace!r} holds no requests for "
+                    f"kernel(s) {missing} (has {sorted(available)})")
+        else:
+            names = tuple(k for k in names if k in available)
+            if not names:
+                raise SystemExit(
+                    f"trace {args.trace!r} covers no registered kernel "
+                    f"(has {sorted(available)})")
+    policy = BatchPolicy(max_batch=args.max_batch,
+                         max_wait_s=args.max_wait_ms / 1e3)
+    slo = SLO(latency_ms=args.slo_ms)
+    env = bench_env(interpret=True, hw_model=DEFAULT_DISPATCHER.hw.name)
+    print("kernel,engine,workload,completed,p50_ms,p99_ms,goodput_rps,"
+          "slo_attainment")
+    for kernel in names:
+        records = []
+        # per-kernel view of the once-parsed trace (None for the
+        # synthetic workloads: run_session builds those generators)
+        source = None if trace is None else TraceLoadGen(
+            requests=[r for r in trace.requests if r.kernel == kernel])
+        for engine in ENGINES:
+            cfg = SessionConfig(
+                kernel=kernel, workload=args.workload, engine=engine,
+                rate_rps=args.rate, duration_s=args.duration,
+                size=args.size, dtype=args.dtype, seed=args.seed,
+                policy=policy, slo=slo, trace_path=args.trace)
+            _, summary, record = run_session(cfg, source=source)
+            records.append(record)
+            print(f"{kernel},{record['engine']},{args.workload},"
+                  f"{summary.completed},{summary.p50_ms:.3f},"
+                  f"{summary.p99_ms:.3f},{summary.goodput_rps:.3f},"
+                  f"{summary.slo_attainment:.4f}")
+        path = write_serving_json(kernel, records, args.out, env=env)
+        print(f"# wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

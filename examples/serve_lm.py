@@ -1,33 +1,26 @@
-"""Batched serving driver: prefill a batch of prompts, then decode with a
-KV cache -- the memory-bound regime the paper's advisor reasons about.
+"""LM serving under traffic: seeded Poisson requests, continuous
+batching, and a latency-percentile table -- the memory-bound regime the
+paper's advisor reasons about, measured as a request stream instead of
+a lone decode loop.
 
-Each decode step is a GEMV against the cache: the advisor classifies it
-(memory-bound -> vector engine; the MXU could buy at most 1+I/B) and the
-driver prints that analysis next to the measured step times.
+Each decode step is a GEMV against the KV cache: the advisor classifies
+it (memory-bound -> vector engine; the MXU could buy at most 1+I/B) and
+the serving subsystem (``repro.serving``) shows what that regime looks
+like at the p50/p99 under load: queueing vs compute split, goodput, and
+SLO attainment.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-780m]
 """
 import argparse
-import time
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_arch, reduced
 from repro.core import TPU_V5E, EngineAdvisor
-from repro.core.intensity import KernelTraits
-from repro.data.synthetic import make_batch
-from repro.models import lm
-
-
-def decode_traits(cfg, batch: int, cache_len: int) -> KernelTraits:
-    """One decode step ~= params read + cache read, 2 flops/byte/elem."""
-    nbytes = (cfg.param_count() * 2
-              + batch * cache_len * cfg.n_layers * cfg.kv_dim * 2 * 2)
-    flops = 2.0 * cfg.param_count() * batch + \
-        4.0 * batch * cfg.n_layers * cache_len * cfg.n_heads * (cfg.head_dim or 0)
-    return KernelTraits("decode_step", flops, float(nbytes))
+from repro.serving import (BatchPolicy, LMDecodeExecutor, SLO,
+                           SessionConfig, format_summary, run_session)
+from repro.serving.lm import decode_traits
+from repro.serving.requests import LM_DECODE
 
 
 def main():
@@ -35,42 +28,36 @@ def main():
     ap.add_argument("--arch", default="deepseek-7b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=16.0,
+                    help="offered Poisson rate, requests/s")
+    ap.add_argument("--duration", type=float, default=2.0,
+                    help="session horizon, virtual seconds")
+    ap.add_argument("--slo-ms", type=float, default=1000.0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = reduced(get_arch(args.arch))
-    params = lm.init_params(cfg, jax.random.key(0))
-    max_len = args.prompt_len + args.gen
 
     # --- advisor analysis of the decode regime (full-size config) ---
     full = get_arch(args.arch)
-    traits = decode_traits(full, 64, 32768)
-    advice = EngineAdvisor(TPU_V5E).advise(traits)
+    advice = EngineAdvisor(TPU_V5E).advise(decode_traits(full, 64, 32768))
     print(f"[advisor] {advice}")
 
-    # --- prefill ---
-    batch = make_batch(cfg, args.batch, args.prompt_len, seed=0)
-    prefill = jax.jit(lambda p, b: lm.prefill(p, cfg, b, dtype=jnp.float32))
-    logits, caches = prefill(params, batch)
-    caches = lm.pad_caches(caches, max_len)
-    print(f"prefill: batch={args.batch} len={args.prompt_len} ok")
-
-    # --- batched greedy decode ---
-    step = jax.jit(lambda p, t, c, i: lm.decode_step(p, cfg, t, c, i,
-                                                     dtype=jnp.float32))
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-    generated = [tok]
-    t0 = time.time()
-    for i in range(args.prompt_len, args.prompt_len + args.gen - 1):
-        logits, caches = step(params, tok, caches, jnp.int32(i))
-        tok = jnp.argmax(logits[:, 0], axis=-1)[:, None]
-        generated.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.time() - t0
-    out = np.concatenate([np.asarray(t) for t in generated], axis=1)
-    print(f"decoded {args.gen - 1} steps x {args.batch} seqs in {dt:.2f}s "
-          f"({dt / (args.gen - 1) * 1e3:.1f} ms/step on CPU)")
-    print(f"sample token ids: {out[0, :16].tolist()}")
+    # --- serve a seeded request stream through continuous batching ---
+    executor = LMDecodeExecutor(cfg, max_batch=args.batch,
+                                prompt_len=args.prompt_len,
+                                max_gen=args.gen, dtype=jnp.float32,
+                                seed=args.seed)
+    session = SessionConfig(
+        kernel=LM_DECODE, workload="poisson", rate_rps=args.rate,
+        duration_s=args.duration, size=args.gen, seed=args.seed,
+        policy=BatchPolicy(max_batch=args.batch, max_wait_s=0.05),
+        slo=SLO(latency_ms=args.slo_ms))
+    _, summary, _ = run_session(session, executor)
+    print(f"({args.gen} tokens per request)")
+    for line in format_summary(summary):
+        print(line)
 
 
 if __name__ == "__main__":

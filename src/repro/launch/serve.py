@@ -1,57 +1,73 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id>``.
 
-Prefill + batched greedy decode against a KV cache, with the advisor's
-memory-bound analysis of the decode step printed up front (the paper's
-technique applied to LM inference).
+LM inference under traffic: seeded requests from the serving
+subsystem's load generators are queued, continuously batched, and
+decoded against a KV cache (``repro.serving.lm.LMDecodeExecutor``),
+with the advisor's memory-bound analysis of the decode step printed up
+front (the paper's §6 technique applied to LM inference) and the
+session's latency percentiles (queue/compute split), goodput, and SLO
+attainment printed at the end.
+
+``--reduced`` (default) serves the smoke-size config;
+``--no-reduced`` serves the full-size architecture.
 """
 import argparse
 import time
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs import ARCHS, get_arch, reduced
 from ..core.dispatch import DEFAULT_DISPATCHER
-from ..core.intensity import KernelTraits
-from ..data.synthetic import make_batch
-from ..models import lm
+from ..serving import (BatchPolicy, LMDecodeExecutor, SLO, SessionConfig,
+                       format_summary, run_session)
+from ..serving.lm import decode_traits
+from ..serving.requests import LM_DECODE
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="serve the smoke-size config (--no-reduced for "
+                         "the full architecture)")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="continuous-batching capacity (max batch)")
     ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16,
+                    help="tokens generated per request")
+    ap.add_argument("--workload", default="poisson",
+                    choices=("poisson", "bursty", "closed"))
+    ap.add_argument("--rate", type=float, default=16.0,
+                    help="offered rate knob, requests/s")
+    ap.add_argument("--duration", type=float, default=2.0,
+                    help="session horizon, virtual seconds")
+    ap.add_argument("--slo-ms", type=float, default=1000.0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     full = get_arch(args.arch)
     cfg = reduced(full) if args.reduced else full
-    params = lm.init_params(cfg, jax.random.key(0))
-    max_len = args.prompt_len + args.gen
 
     # dispatch layer: the production-size decode step is memory-bound
-    kv_bytes = 128 * 32768 * full.n_layers * full.kv_dim * 2 * 2
-    traits = KernelTraits("decode@32k", 2.0 * full.param_count() * 128,
-                          full.param_count() * 2.0 + kv_bytes)
+    traits = decode_traits(full, 128, 32768)
     print(f"[advisor] {DEFAULT_DISPATCHER.advise_traits(traits)}")
 
-    batch = make_batch(cfg, args.batch, args.prompt_len, seed=0)
-    logits, caches = jax.jit(
-        lambda p, b: lm.prefill(p, cfg, b, dtype=jnp.float32))(params, batch)
-    caches = lm.pad_caches(caches, max_len)
-    step = jax.jit(lambda p, t, c, i: lm.decode_step(p, cfg, t, c, i,
-                                                     dtype=jnp.float32))
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-    t0 = time.time()
-    for i in range(args.prompt_len, max_len - 1):
-        logits, caches = step(params, tok, caches, jnp.int32(i))
-        tok = jnp.argmax(logits[:, 0], axis=-1)[:, None]
-    jax.block_until_ready(tok)
-    print(f"served {args.batch} seqs x {args.gen - 1} tokens "
-          f"in {time.time() - t0:.2f}s")
+    executor = LMDecodeExecutor(cfg, max_batch=args.batch,
+                                prompt_len=args.prompt_len,
+                                max_gen=args.gen, dtype=jnp.float32,
+                                seed=args.seed)
+    session = SessionConfig(
+        kernel=LM_DECODE, workload=args.workload, rate_rps=args.rate,
+        duration_s=args.duration, size=args.gen, seed=args.seed,
+        policy=BatchPolicy(max_batch=args.batch, max_wait_s=0.05),
+        slo=SLO(latency_ms=args.slo_ms))
+    t0 = time.perf_counter()
+    _, summary, _ = run_session(session, executor)
+    wall = time.perf_counter() - t0
+    for line in format_summary(summary):
+        print(line)
+    print(f"(wall time {wall:.2f}s)")
 
 
 if __name__ == "__main__":

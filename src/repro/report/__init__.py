@@ -6,24 +6,32 @@ validated by measurements.  This package closes the loop the raw
 ``runs/BENCH_*.json`` files leave open:
 
 1. :mod:`repro.report.records` ingests every benchmark record file
-   (schema 1 legacy lists and schema 2 env-annotated sets),
+   (schema 1 legacy lists, schema 2/3 env-annotated sweep sets, and
+   schema-4 **serving** session sets from ``benchmarks.run serve``),
 2. :mod:`repro.report.claims` joins each record back to the analytic
    layer and verifies the paper's claims (Eq. 4 boundedness, the
-   Eq. 17/23/24 ceiling, §6 engine routing, oracle accuracy),
+   Eq. 17/23/24 ceiling, §6 engine routing — per call for bench
+   records, in steady state under load for serving records, plus
+   latency-percentile and goodput consistency),
 3. :mod:`repro.report.render` publishes a deterministic ``REPORT.md``
    plus per-kernel pages under ``docs/benchmarks/``.
 
 Entry point: ``python -m benchmarks.run report`` (CI regenerates and
-diffs the output; ``benchmarks/compare.py`` gates regressions).
+diffs the output; ``benchmarks/compare.py`` gates regressions — µs per
+call for sweeps, p99/goodput for serving sessions).
 """
-from .claims import (CLAIMS, TOLERANCE, ClaimResult, ceiling_bound,
-                     check_record, check_records, hw_for, violations)
-from .records import BenchRecord, RecordSet, load_dir, load_file
-from .render import render_kernel_page, render_report, write_report
+from .claims import (CLAIMS, SERVING_CLAIMS, TOLERANCE, ClaimResult,
+                     ceiling_bound, check_record, check_records,
+                     check_serving_record, hw_for, violations)
+from .records import (BenchRecord, RecordSet, ServingRecord, load_dir,
+                      load_file)
+from .render import (page_name, render_kernel_page, render_report,
+                     render_serving_page, write_report)
 
 __all__ = [
-    "CLAIMS", "TOLERANCE", "BenchRecord", "ClaimResult", "RecordSet",
-    "ceiling_bound", "check_record", "check_records", "hw_for",
-    "load_dir", "load_file", "render_kernel_page", "render_report",
-    "violations", "write_report",
+    "CLAIMS", "SERVING_CLAIMS", "TOLERANCE", "BenchRecord", "ClaimResult",
+    "RecordSet", "ServingRecord", "ceiling_bound", "check_record",
+    "check_records", "check_serving_record", "hw_for", "load_dir",
+    "load_file", "page_name", "render_kernel_page", "render_report",
+    "render_serving_page", "violations", "write_report",
 ]

@@ -14,24 +14,39 @@ checks the paper's claims record by record:
   memory path.
 * **boundedness** (Eq. 4) -- the recorded memory-bound flag matches a
   fresh I < B_vector derivation from the recorded intensity.
+
+Schema-4 serving records (sessions under traffic) get their own claim
+set (:data:`SERVING_CLAIMS`): the Eq. 23/24 **ceiling**, §6 routing,
+and Eq. 4 boundedness are re-derived exactly as above, plus two
+internal-consistency claims — latency percentiles must be non-negative
+and monotone (p50 ≤ p95 ≤ p99), and goodput must be consistent with
+the SLO-attainment and completion accounting (goodput =
+attained/duration, never exceeding throughput) — so a hand-edited or
+buggy serving record cannot publish an impossible latency/goodput
+story or a ceiling the theory forbids.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Sequence, Tuple
+from typing import Dict, Iterable, List, Sequence, Tuple, Union
 
 from ..core.advisor import EngineAdvisor
 from ..core.balance import machine_balance
 from ..core.bounds import tensor_core_upper_bound, workload_upper_bound
 from ..core.hw import PLATFORMS, TPU_V5E, HardwareSpec
 from ..core.intensity import KernelTraits
-from .records import BenchRecord, RecordSet
+from .records import BenchRecord, RecordSet, ServingRecord
 
-__all__ = ["CLAIMS", "ClaimResult", "TOLERANCE", "ceiling_bound",
-           "check_record", "check_records", "hw_for", "violations"]
+__all__ = ["CLAIMS", "ClaimResult", "SERVING_CLAIMS", "TOLERANCE",
+           "ceiling_bound", "check_record", "check_records",
+           "check_serving_record", "hw_for", "violations"]
 
 #: Claim identifiers, in report order.
 CLAIMS = ("ceiling", "routing", "accuracy", "boundedness")
+
+#: Serving-record claim identifiers, in report order.
+SERVING_CLAIMS = ("ceiling", "routing", "boundedness", "percentiles",
+                  "goodput")
 
 #: Max abs error allowed between an engine variant and its oracle.
 #: bfloat16 has an 8-bit mantissa, so elementwise results on O(10)
@@ -43,10 +58,10 @@ _EPS = 1e-9
 
 @dataclasses.dataclass(frozen=True)
 class ClaimResult:
-    """Outcome of one claim check against one benchmark record."""
+    """Outcome of one claim check against one bench/serving record."""
 
-    claim: str           # one of CLAIMS
-    record: BenchRecord
+    claim: str           # one of CLAIMS / SERVING_CLAIMS
+    record: Union[BenchRecord, ServingRecord]
     passed: bool
     detail: str          # human-readable evidence string
 
@@ -76,13 +91,15 @@ def ceiling_bound(intensity: float, hw: HardwareSpec) -> float:
                workload_upper_bound(intensity, b_vec))
 
 
-def check_record(rec: BenchRecord,
-                 hw: HardwareSpec = TPU_V5E) -> Tuple[ClaimResult, ...]:
-    """Verify all four paper claims (Eq. 4, Eq. 17/23/24, §6) for one record.
+def _analytic_checks(rec, hw: HardwareSpec,
+                     routing_context: str = "") -> List[ClaimResult]:
+    """The ceiling/routing/boundedness checks both record kinds share.
 
-    Returns one :class:`ClaimResult` per entry in :data:`CLAIMS`, in
-    order, re-deriving the advisor's decision from the recorded
-    intensity so a stale or hand-edited record cannot pass silently.
+    Bench sweep points and serving sessions carry the same analytic
+    join fields (intensity, memory_bound, engine_auto, mxu_ceiling),
+    so Eq. 17/23/24, §6 routing, and Eq. 4 are verified by one
+    implementation — the two record kinds can never drift onto
+    different rules.
     """
     advice = EngineAdvisor(hw).advise(
         KernelTraits(rec.kernel, rec.intensity, 1.0))
@@ -106,32 +123,93 @@ def check_record(rec: BenchRecord,
     results.append(ClaimResult(
         "routing", rec, routing_ok,
         f"auto={rec.engine_auto} vs advisor={advice.engine} "
-        f"(memory_bound={rec.memory_bound})"))
-
-    tol = TOLERANCE.get(rec.dtype, TOLERANCE["float32"])
-    results.append(ClaimResult(
-        "accuracy", rec, rec.max_err <= tol,
-        f"max_err {rec.max_err:.3g} vs {rec.dtype} tolerance {tol:g}"))
+        f"(memory_bound={rec.memory_bound}{routing_context})"))
 
     results.append(ClaimResult(
         "boundedness", rec, rec.memory_bound == advice.memory_bound,
         f"recorded memory_bound={rec.memory_bound} vs derived "
         f"I={rec.intensity:.4g} < B_vec={machine_balance(hw, 'vector'):.4g} "
         f"-> {advice.memory_bound}"))
+    return results
+
+
+def check_record(rec: BenchRecord,
+                 hw: HardwareSpec = TPU_V5E) -> Tuple[ClaimResult, ...]:
+    """Verify all four paper claims (Eq. 4, Eq. 17/23/24, §6) for one record.
+
+    Returns one :class:`ClaimResult` per entry in :data:`CLAIMS`, in
+    order, re-deriving the advisor's decision from the recorded
+    intensity so a stale or hand-edited record cannot pass silently.
+    """
+    ceiling, routing, boundedness = _analytic_checks(rec, hw)
+
+    tol = TOLERANCE.get(rec.dtype, TOLERANCE["float32"])
+    accuracy = ClaimResult(
+        "accuracy", rec, rec.max_err <= tol,
+        f"max_err {rec.max_err:.3g} vs {rec.dtype} tolerance {tol:g}")
+    return (ceiling, routing, accuracy, boundedness)
+
+
+def check_serving_record(rec: ServingRecord,
+                         hw: HardwareSpec = TPU_V5E,
+                         ) -> Tuple[ClaimResult, ...]:
+    """Verify the serving claims (§6 routing under load, Eq. 4, latency
+    and goodput consistency) for one schema-4 session record.
+
+    Returns one :class:`ClaimResult` per entry in
+    :data:`SERVING_CLAIMS`, in order, re-deriving the advisor's
+    decision from the recorded intensity so the paper's routing story
+    is checked in steady state, not just per call.
+    """
+    # Eq. 17/23/24, §6 routing, Eq. 4: the same checks as per-call
+    # sweep points, via the shared helper (a record claiming a bigger
+    # matrix-engine win than the theory allows is a violation whether
+    # it was measured per call or under traffic)
+    ceiling, routing, boundedness = _analytic_checks(
+        rec, hw, routing_context=f", workload={rec.workload}")
+    results = [ceiling, routing, boundedness]
+
+    pct_ok = (0.0 <= rec.p50_ms <= rec.p95_ms + _EPS
+              and rec.p95_ms <= rec.p99_ms + _EPS
+              and rec.queue_p50_ms >= 0.0 and rec.compute_p50_ms >= 0.0)
+    results.append(ClaimResult(
+        "percentiles", rec, pct_ok,
+        f"p50={rec.p50_ms:.4g} <= p95={rec.p95_ms:.4g} <= "
+        f"p99={rec.p99_ms:.4g} ms, queue/compute splits >= 0"))
+
+    throughput = (rec.completed / rec.duration_s
+                  if rec.duration_s > 0 else 0.0)
+    # goodput = attained/duration; attainment and goodput are rounded
+    # independently at record time, so allow that rounding slack
+    expect = rec.slo_attainment * throughput
+    slack = 0.5 + 0.01 * max(throughput, 1.0)
+    goodput_ok = (0.0 <= rec.slo_attainment <= 1.0 + _EPS
+                  and rec.completed <= rec.offered
+                  and rec.goodput_rps <= throughput + slack
+                  and abs(rec.goodput_rps - expect) <= slack)
+    results.append(ClaimResult(
+        "goodput", rec, goodput_ok,
+        f"goodput {rec.goodput_rps:.4g}/s vs attainment "
+        f"{rec.slo_attainment:.4g} x throughput {throughput:.4g}/s "
+        f"({rec.completed}/{rec.offered} completed)"))
     return tuple(results)
 
 
 def check_records(recsets: Sequence[RecordSet]) -> List[ClaimResult]:
-    """Run :func:`check_record` over every record of every set.
+    """Run the kind-appropriate checks over every record of every set.
 
-    The hardware model is resolved per record set from its environment
-    metadata, so mixed-platform runs/ directories verify correctly.
+    Bench sets go through :func:`check_record`, serving sets through
+    :func:`check_serving_record`.  The hardware model is resolved per
+    record set from its environment metadata, so mixed-platform runs/
+    directories verify correctly.
     """
     out: List[ClaimResult] = []
     for rs in recsets:
         hw = hw_for(rs)
+        check = (check_serving_record if rs.kind == "serving"
+                 else check_record)
         for rec in rs.records:
-            out.extend(check_record(rec, hw))
+            out.extend(check(rec, hw))
     return out
 
 

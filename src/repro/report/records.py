@@ -1,8 +1,7 @@
 """Benchmark record ingestion for the claims report (paper §5 evidence).
 
-Loads every ``runs/BENCH_<kernel>.json`` produced by the benchmark
-harness into typed :class:`BenchRecord` rows.  Two file schemas are
-accepted:
+Loads every ``runs/BENCH_*.json`` produced by the benchmark harness
+into typed rows.  Four file schemas are accepted:
 
 * schema 1 (legacy) -- a bare JSON list of record dicts,
 * schema 2 -- ``{"schema": 2, "kernel": ..., "env": {...},
@@ -10,13 +9,18 @@ accepted:
   kind, interpret flag, hardware model),
 * schema 3 -- schema 2 plus an optional per-record ``tile_config``
   (the tuned tile params a sweep point launched with, and the tuner's
-  tuned-vs-default timings; null = static tile defaults).
+  tuned-vs-default timings; null = static tile defaults),
+* schema 4 -- **serving** record sets (``"kind": "serving"``) from
+  ``python -m benchmarks.run serve``: one :class:`ServingRecord` per
+  (kernel, engine, workload, size, dtype) session with latency
+  percentiles (queue/compute split), goodput, and SLO attainment.
 
-Each record is one (kernel, engine, size, dtype) sweep point carrying
+Bench records are (kernel, engine, size, dtype) sweep points carrying
 the measured reference time, the max error vs. the oracle, and the
 analytic fields (intensity per Eq. 2, boundedness per Eq. 4, the
 matrix-engine ceiling per Eq. 23/24) that ``repro.report.claims``
-re-derives and verifies.
+re-derives and verifies; serving records carry the same analytic join
+fields so §6 routing is re-checked *under load* too.
 """
 from __future__ import annotations
 
@@ -24,9 +28,10 @@ import dataclasses
 import glob
 import json
 import os
-from typing import Any, Mapping, Optional, Tuple
+from typing import Any, Mapping, Optional, Tuple, Union
 
-__all__ = ["BenchRecord", "RecordSet", "load_dir", "load_file"]
+__all__ = ["BenchRecord", "RecordSet", "ServingRecord", "load_dir",
+           "load_file"]
 
 _REQUIRED = ("kernel", "engine", "size", "dtype", "ref_us_per_call",
              "max_err", "intensity", "memory_bound", "engine_auto",
@@ -85,15 +90,81 @@ class BenchRecord:
         return float(default) / float(tuned)
 
 
+_SERVING_REQUIRED = (
+    "kernel", "engine", "engine_auto", "workload", "rate_rps",
+    "duration_s", "size", "dtype", "seed", "offered", "completed",
+    "p50_ms", "p95_ms", "p99_ms", "queue_p50_ms", "compute_p50_ms",
+    "goodput_rps", "slo_ms", "slo_attainment", "intensity",
+    "memory_bound", "mxu_ceiling")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingRecord:
+    """One serving session: load model + latency/goodput + analytics.
+
+    Mirrors the dict built by ``repro.serving.metrics.serving_record``:
+    the workload model and offered rate, latency percentiles in
+    milliseconds (end-to-end plus the queue/compute split at the
+    batch-launch boundary), goodput/SLO accounting per
+    ``repro.serving.slo``, and the analytic join fields (Eq. 2
+    intensity, Eq. 4 boundedness, the Eq. 17/23/24 ceiling, §6
+    auto-routing) the claims layer re-derives under load.
+    """
+
+    kernel: str
+    engine: str               # session engine ('vector'|'matrix'|'mixed')
+    engine_auto: str          # what the memoized Advice resolved to
+    workload: str             # 'poisson' | 'bursty' | 'closed' | 'trace'
+    rate_rps: float           # offered rate knob of the generator
+    duration_s: float         # session horizon (virtual seconds)
+    size: int                 # per-request elements / decode tokens
+    dtype: str
+    seed: int                 # loadgen seed (sessions are replayable)
+    offered: int              # arrivals inside the horizon
+    completed: int            # requests served
+    p50_ms: float             # end-to-end latency percentiles
+    p95_ms: float
+    p99_ms: float
+    queue_p50_ms: float       # batch-formation wait split
+    compute_p50_ms: float     # shared batch compute split
+    goodput_rps: float        # SLO-attaining completions per second
+    slo_ms: float             # the session's latency objective
+    slo_attainment: float     # attained fraction of completions
+    intensity: float          # Eq. 2: I = W / Q
+    memory_bound: bool        # Eq. 4: I < B_vector
+    mxu_ceiling: float        # advisor's matrix-engine speedup ceiling
+    queue_p99_ms: Optional[float] = None
+    compute_p99_ms: Optional[float] = None
+    throughput_rps: Optional[float] = None
+    batches: Optional[int] = None
+    mean_batch: Optional[float] = None
+    # batching-policy knobs the session ran under: part of the
+    # comparability contract the compare gate enforces on joined keys
+    max_batch: Optional[int] = None
+    max_wait_ms: Optional[float] = None
+
+    @property
+    def point(self) -> Tuple[str, str, str, int, str]:
+        """Session key (kernel, engine, workload, size, dtype) — what
+        the ``benchmarks/compare.py`` p99/goodput gate joins on."""
+        return (self.kernel, self.engine, self.workload, self.size,
+                self.dtype)
+
+
 @dataclasses.dataclass(frozen=True)
 class RecordSet:
-    """All records of one ``BENCH_<kernel>.json`` file plus metadata."""
+    """All records of one ``BENCH_*.json`` file plus metadata.
+
+    ``kind`` says what the records are: ``'bench'`` sweep points
+    (schemas 1-3) or ``'serving'`` session records (schema 4).
+    """
 
     kernel: str
     schema: int
     env: Mapping[str, Any]
-    records: Tuple[BenchRecord, ...]
+    records: Tuple[Union[BenchRecord, ServingRecord], ...]
     path: str
+    kind: str = "bench"
 
 
 def _to_record(raw: Mapping[str, Any], path: str) -> BenchRecord:
@@ -129,41 +200,93 @@ def _to_record(raw: Mapping[str, Any], path: str) -> BenchRecord:
     )
 
 
-def load_file(path: str) -> RecordSet:
-    """Parse one BENCH_<kernel>.json (schema 1, 2, or 3) into a RecordSet.
+def _to_serving_record(raw: Mapping[str, Any], path: str) -> ServingRecord:
+    missing = [k for k in _SERVING_REQUIRED if k not in raw]
+    if missing:
+        raise ValueError(f"{path}: serving record missing fields "
+                         f"{missing}; got {sorted(raw)}")
+    opt = {k: raw.get(k) for k in ("queue_p99_ms", "compute_p99_ms",
+                                   "throughput_rps", "mean_batch",
+                                   "max_wait_ms")}
+    return ServingRecord(
+        kernel=str(raw["kernel"]),
+        engine=str(raw["engine"]),
+        engine_auto=str(raw["engine_auto"]),
+        workload=str(raw["workload"]),
+        rate_rps=float(raw["rate_rps"]),
+        duration_s=float(raw["duration_s"]),
+        size=int(raw["size"]),
+        dtype=str(raw["dtype"]),
+        seed=int(raw["seed"]),
+        offered=int(raw["offered"]),
+        completed=int(raw["completed"]),
+        p50_ms=float(raw["p50_ms"]),
+        p95_ms=float(raw["p95_ms"]),
+        p99_ms=float(raw["p99_ms"]),
+        queue_p50_ms=float(raw["queue_p50_ms"]),
+        compute_p50_ms=float(raw["compute_p50_ms"]),
+        goodput_rps=float(raw["goodput_rps"]),
+        slo_ms=float(raw["slo_ms"]),
+        slo_attainment=float(raw["slo_attainment"]),
+        intensity=float(raw["intensity"]),
+        memory_bound=bool(raw["memory_bound"]),
+        mxu_ceiling=float(raw["mxu_ceiling"]),
+        batches=(int(raw["batches"])
+                 if raw.get("batches") is not None else None),
+        max_batch=(int(raw["max_batch"])
+                   if raw.get("max_batch") is not None else None),
+        **{k: (float(v) if v is not None else None)
+           for k, v in opt.items()},
+    )
 
-    Raises ``ValueError`` on unknown schema versions or records missing
-    the fields the claim checks (Eq. 23/24 ceiling, §6 routing) need.
+
+def load_file(path: str) -> RecordSet:
+    """Parse one BENCH_*.json (schema 1-4) into a RecordSet.
+
+    Schema 4 payloads (``"kind": "serving"``) load as
+    :class:`ServingRecord` rows; earlier schemas as
+    :class:`BenchRecord` sweep points.  Raises ``ValueError`` on
+    unknown schema versions or records missing the fields the claim
+    checks (Eq. 23/24 ceiling, §6 routing) need.
     """
     with open(path) as f:
         payload = json.load(f)
+    kind = "bench"
     if isinstance(payload, list):          # schema 1: bare record list
         schema, env, raw_records = 1, {}, payload
     elif isinstance(payload, dict):
         schema = int(payload.get("schema", 0))
-        if schema not in (2, 3):
+        if schema not in (2, 3, 4):
             raise ValueError(f"{path}: unsupported schema {schema!r} "
-                             f"(expected 1-list, 2, or 3)")
+                             f"(expected 1-list, 2, 3, or 4)")
+        if schema == 4:
+            kind = str(payload.get("kind", "serving"))
+            if kind != "serving":
+                raise ValueError(f"{path}: schema-4 payload has unknown "
+                                 f"kind {kind!r} (expected 'serving')")
         env = dict(payload.get("env", {}))
         raw_records = payload.get("records")
         if not isinstance(raw_records, list):
-            raise ValueError(f"{path}: schema-2 payload missing its "
-                             f"'records' list")
+            raise ValueError(f"{path}: schema-{schema} payload missing "
+                             f"its 'records' list")
     else:
         raise ValueError(f"{path}: expected a list or object, "
                          f"got {type(payload).__name__}")
-    records = tuple(_to_record(r, path) for r in raw_records)
+    to_record = _to_serving_record if kind == "serving" else _to_record
+    records = tuple(to_record(r, path) for r in raw_records)
     if not records:
         raise ValueError(f"{path}: no records")
     kernels = sorted({r.kernel for r in records})
     if len(kernels) != 1:
         raise ValueError(f"{path}: mixed kernels {kernels} in one file")
     return RecordSet(kernel=kernels[0], schema=schema, env=env,
-                     records=records, path=path)
+                     records=records, path=path, kind=kind)
 
 
 def load_dir(runs_dir: str = "runs") -> Tuple[RecordSet, ...]:
-    """Load every ``BENCH_*.json`` under *runs_dir*, sorted by kernel.
+    """Load every ``BENCH_*.json`` under *runs_dir*, sorted by
+    (kernel, kind) — a family's bench sweep sorts before its serving
+    sessions.
 
     This is the measurement half of the paper's measure-vs-theory loop;
     the returned sets feed ``repro.report.claims.check_records``.
@@ -172,5 +295,5 @@ def load_dir(runs_dir: str = "runs") -> Tuple[RecordSet, ...]:
     if not paths:
         raise FileNotFoundError(f"no BENCH_*.json files under {runs_dir!r}")
     sets = tuple(sorted((load_file(p) for p in paths),
-                        key=lambda s: s.kernel))
+                        key=lambda s: (s.kernel, s.kind)))
     return sets

@@ -1,0 +1,105 @@
+"""LM decode executor: the serving subsystem's language-model backend.
+
+Serves :data:`~repro.serving.requests.LM_DECODE` requests through the
+same continuous-batching scheduler as the kernel families: a formed
+batch of requests (each asking for ``size`` generated tokens) is padded
+to the executor's fixed ``max_batch`` capacity, prefilled once, and
+greedily decoded step by step against the KV cache — the GEMV-shaped,
+memory-bound regime the paper's framework classifies (decode intensity
+sits far below machine balance, so the advisor routes it to the vector
+engine; the serving records let the claims layer re-check that §6 call
+under real traffic).
+
+Capacity padding matters for the same reason it does in
+``repro.serving.batcher``: prefill and every decode step compile once
+per (batch, prompt_len) shape, so variable formed-batch sizes reuse one
+compiled step instead of retracing.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from ..core.dispatch import DEFAULT_DISPATCHER
+from ..core.intensity import KernelTraits
+from ..data.synthetic import make_batch
+from ..models import lm
+from ..models.config import ModelConfig
+from .requests import Request
+from .scheduler import BatchExecution
+
+__all__ = ["LMDecodeExecutor", "decode_traits"]
+
+
+def decode_traits(cfg: ModelConfig, batch: int,
+                  cache_len: int) -> KernelTraits:
+    """Eq. 2 traits of one decode step: W ≈ 2·params·B (+ attention
+    reads), Q ≈ params + KV cache bytes — deep in memory-bound country."""
+    head_dim = cfg.head_dim or 0
+    nbytes = (cfg.param_count() * 2
+              + batch * cache_len * cfg.n_layers * cfg.kv_dim * 2 * 2)
+    flops = (2.0 * cfg.param_count() * batch
+             + 4.0 * batch * cfg.n_layers * cache_len * cfg.n_heads
+             * head_dim)
+    return KernelTraits("decode_step", flops, float(nbytes))
+
+
+class LMDecodeExecutor:
+    """Prefill + batched greedy decode for LM_DECODE request batches.
+
+    One instance owns the model parameters and the jitted
+    prefill/decode-step functions; ``execute`` serves one formed batch
+    (padded to ``max_batch``) and reports measured wall compute.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, max_batch: int = 4,
+                 prompt_len: int = 16, max_gen: int = 16,
+                 dtype=jnp.float32, seed: int = 0):
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.prompt_len = prompt_len
+        self.max_gen = max_gen
+        self._dtype = dtype
+        self.params = lm.init_params(cfg, jax.random.key(seed))
+        self._prefill = jax.jit(
+            lambda p, b: lm.prefill(p, cfg, b, dtype=dtype))
+        self._step = jax.jit(
+            lambda p, t, c, i: lm.decode_step(p, cfg, t, c, i, dtype=dtype))
+        # one canonical capacity-sized prompt batch: request payloads
+        # are synthetic, so every launch reuses the compiled shapes
+        self._batch = make_batch(cfg, max_batch, prompt_len, seed=seed)
+        self._warmed = False
+
+    def advice_for(self, kernel: str, size: int, dtype: str):
+        """Memoized Advice for the decode regime (§6: memory-bound →
+        vector engine); signature-compatible with the kernel executor."""
+        del kernel, size, dtype
+        return DEFAULT_DISPATCHER.advise_traits(
+            decode_traits(self.cfg, self.max_batch,
+                          self.prompt_len + self.max_gen))
+
+    def _decode(self, gen: int) -> None:
+        logits, caches = self._prefill(self.params, self._batch)
+        caches = lm.pad_caches(caches, self.prompt_len + self.max_gen)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        for i in range(self.prompt_len, self.prompt_len + gen - 1):
+            logits, caches = self._step(self.params, tok, caches,
+                                        jnp.int32(i))
+            tok = jnp.argmax(logits[:, 0], axis=-1)[:, None]
+        jax.block_until_ready(tok)
+
+    def execute(self, batch: List[Request]) -> BatchExecution:
+        """Serve one formed batch: prefill + ``max(size)`` decode steps."""
+        gen = min(self.max_gen, max(r.size for r in batch))
+        if not self._warmed:
+            # compile prefill + step outside the timed region
+            self._decode(gen)
+            self._warmed = True
+        t0 = time.perf_counter()
+        self._decode(gen)
+        compute_s = time.perf_counter() - t0
+        advice = self.advice_for("lm-decode", gen, "float32")
+        return BatchExecution(engine=advice.engine, compute_s=compute_s)

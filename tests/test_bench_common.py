@@ -106,10 +106,10 @@ def test_compare_summary_table_counts_per_kernel(tmp_path):
 
     table = result.summary_table()
     assert table[0].split() == ["kernel", "compared", "missing", "perf",
-                                "claims", "status"]
+                                "goodput", "config", "claims", "status"]
     rows = {line.split()[0]: line.split() for line in table[1:]}
-    assert rows["scale"] == ["scale", "1", "1", "1", "0", "FAIL"]
-    assert rows["triad"] == ["triad", "1", "0", "0", "1", "FAIL"]
+    assert rows["scale"] == ["scale", "1", "1", "1", "0", "0", "0", "FAIL"]
+    assert rows["triad"] == ["triad", "1", "0", "0", "0", "0", "1", "FAIL"]
 
 
 def test_compare_summary_table_marks_clean_kernels(tmp_path):

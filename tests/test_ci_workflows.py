@@ -79,6 +79,19 @@ def test_ci_pr_gate_uses_tuned_cache():
     runs = _run_text(_load("ci.yml")["jobs"]["lint-unit"])
     assert "--tuned tuned.json" in runs
     assert "benchmarks.compare runs runs-ci" in runs
+    # the bench gate must not demand serving coverage of a bench-only
+    # candidate sweep (and vice versa)
+    assert "--kind bench" in runs
+
+
+def test_ci_serve_smoke_gate():
+    """The fast serve-smoke: a short Poisson run on the two cheapest
+    families, gated on p99/goodput against the committed baseline."""
+    runs = _run_text(_load("ci.yml")["jobs"]["lint-unit"])
+    assert "benchmarks.run serve --workload poisson" in runs
+    assert "--kernels scale,axpy" in runs
+    assert "benchmarks.compare runs runs-ci-serve" in runs
+    assert "--kind serving" in runs
 
 
 def test_nightly_schedule_and_artifacts():
@@ -90,12 +103,16 @@ def test_nightly_schedule_and_artifacts():
 
     job = wf["jobs"]["sweep-and-tune"]
     runs = _run_text(job)
-    # full sweep + regression gate + budget-capped tune smoke
+    # full sweep + regression gate + serving sweep + tune smoke
     assert "benchmarks.run kernels --tuned tuned.json" in runs
     assert "benchmarks.compare runs runs-nightly" in runs
+    assert "benchmarks.run serve --tuned tuned.json" in runs
+    assert "benchmarks.compare runs runs-serve-nightly" in runs
+    assert "--kind serving" in runs
     assert "benchmarks.run tune --budget" in runs
     uploads = [s for s in job["steps"]
                if "upload-artifact" in s.get("uses", "")]
     assert uploads and uploads[0].get("if") == "always()"
     path = uploads[0]["with"]["path"]
     assert "tuned-nightly.json" in path and "compare-gate.txt" in path
+    assert "runs-serve-nightly" in path and "serve-gate.txt" in path

@@ -17,6 +17,12 @@ MODULES = (
     "repro.report.records",
     "repro.report.claims",
     "repro.report.render",
+    "repro.serving",
+    "repro.serving.loadgen",
+    "repro.serving.scheduler",
+    "repro.serving.batcher",
+    "repro.serving.metrics",
+    "repro.serving.slo",
 )
 
 # (module, qualname) pairs whose docstrings must cite the paper.
@@ -31,11 +37,16 @@ PAPER_CITED = (
     ("repro.kernels.registry", "EngineOp.advice"),
     ("repro.kernels.registry", "register"),
     ("repro.report.records", "BenchRecord"),
+    ("repro.report.records", "ServingRecord"),
     ("repro.report.records", "load_file"),
     ("repro.report.claims", "ceiling_bound"),
     ("repro.report.claims", "check_record"),
+    ("repro.report.claims", "check_serving_record"),
     ("repro.report.render", "render_report"),
     ("repro.report.render", "write_report"),
+    ("repro.serving.scheduler", "ContinuousBatchingScheduler"),
+    ("repro.serving.batcher", "KernelBatchExecutor"),
+    ("repro.serving.metrics", "serving_record"),
 )
 
 

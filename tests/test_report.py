@@ -47,11 +47,15 @@ def _write_set(path, records, schema=2, kernel="scale"):
 
 def test_load_committed_runs_schema3():
     sets = load_dir(str(RUNS))
-    assert [s.kernel for s in sets] == sorted(s.kernel for s in sets)
+    keys = [(s.kernel, s.kind) for s in sets]
+    assert keys == sorted(keys)
     assert {s.kernel for s in sets} >= {"attention", "axpy", "scale",
                                         "spmv", "stencil", "triad"}
     tuned_points = 0
     for s in sets:
+        if s.kind == "serving":
+            assert s.schema == 4  # serving sessions live in schema 4
+            continue
         assert s.schema == 3
         assert "jax" in s.env and "device" in s.env
         assert s.env["interpret"] is True
@@ -199,11 +203,15 @@ def test_write_report_removes_orphan_pages(tmp_path):
 def test_committed_report_is_current():
     """REPORT.md and docs/benchmarks/ match the committed runs/ records
     (i.e. `python -m benchmarks.run report` was run before commit)."""
+    from repro.report import page_name, render_serving_page
+
     recsets = load_dir(str(RUNS))
     assert (REPO / "REPORT.md").read_text() == render_report(recsets)
     for rs in recsets:
-        page = REPO / "docs" / "benchmarks" / f"{rs.kernel}.md"
-        assert page.read_text() == render_kernel_page(rs), page
+        page = REPO / "docs" / "benchmarks" / page_name(rs)
+        render = (render_serving_page if rs.kind == "serving"
+                  else render_kernel_page)
+        assert page.read_text() == render(rs), page
 
 
 def test_report_renders_tuned_deltas(tmp_path):
