@@ -10,6 +10,16 @@ share one ``ref_us_per_call``), and report the analytic v5e
 memory-floor time plus the paper's matrix-engine ceiling from the
 memoized Advice.  CSV rows go to stdout; the same records land in
 ``runs/BENCH_<kernel>.json`` for cross-PR perf tracking.
+
+``--mesh N`` sweeps the same points under an N-way data-axis mesh
+(``repro.sharding``): every engine variant executes shard by shard —
+so the correctness column proves halo exchange and head/row splits
+reproduce the oracle — and each record carries ``mesh_shape`` plus a
+``shard_spec`` with the plan's traffic accounting (per-shard bytes,
+aggregate vs. unsharded bytes, worst per-shard intensity), which the
+claims layer verifies against the paper's per-device ceiling
+(Eq. 23/24 survives aggregation: per-shard bandwidth still sets the
+roof).
 """
 from __future__ import annotations
 
@@ -19,6 +29,7 @@ import numpy as np
 
 from repro.core.dispatch import DEFAULT_DISPATCHER
 from repro.kernels import registry
+from repro.sharding import ShardedExecutor, traffic
 
 from .common import bench_env, emit, time_fn, write_json
 
@@ -26,9 +37,10 @@ from .common import bench_env, emit, time_fn, write_json
 def _tile_config_field(op, engine: str, dtype: str) -> Optional[dict]:
     """The tuned-tile evidence for one sweep point, or None (defaults).
 
-    Carries the tuner's own measurements (``tuned_us`` vs
-    ``default_us``) alongside the params so the claims report can
-    render tuned-vs-default deltas without re-timing anything.
+    Carries the tuner's own measurements (``tuned_us`` -- the cache's
+    ``best_us`` -- vs ``default_us``) alongside the params so the
+    claims report can render tuned-vs-default deltas without re-timing
+    anything.
     """
     entry = DEFAULT_DISPATCHER.tuning.lookup(
         op.name, engine, dtype, DEFAULT_DISPATCHER.hw.name)
@@ -42,10 +54,37 @@ def _tile_config_field(op, engine: str, dtype: str) -> Optional[dict]:
     }
 
 
-def records_for(op) -> List[dict]:
-    """One record per (engine, size, dtype) for a registered kernel."""
+def _shard_spec_field(op, plan, args, kw, hw) -> dict:
+    """The schema-5 ``shard_spec`` evidence for one mesh sweep point.
+
+    The plan's compact spec plus its Eq. 2 traffic accounting: the
+    worst shard's bytes and intensity (what sets the per-shard roof),
+    the aggregate bytes all shards move vs. the unsharded total (the
+    halo / replication overhead the claims layer bounds), and the
+    per-shard analytic memory-floor time on the v5e model.
+    """
+    t = traffic(op, plan, args, kw)
+    return {
+        **plan.spec.to_json(),
+        "total_bytes": t["total_bytes"],
+        "agg_bytes": t["agg_bytes"],
+        "shard_bytes": t["shard_bytes"],
+        "shard_intensity": t["shard_intensity"],
+        "pred_shard_us_v5e": round(
+            t["shard_bytes"] / hw.mem_bw * 1e6, 3),
+    }
+
+
+def records_for(op, mesh: int = 1) -> List[dict]:
+    """One record per (engine, size, dtype) for a registered kernel.
+
+    With ``mesh > 1`` each engine variant runs through the sharded
+    executor instead of a single launch; ``max_err`` then certifies
+    the *sharded* result against the oracle.
+    """
     rng = np.random.default_rng(0)
     hw = DEFAULT_DISPATCHER.hw
+    sharded = ShardedExecutor(mesh) if mesh > 1 else None
     recs = []
     for size in op.bench_sizes:
         for dtype in op.dtypes:
@@ -55,10 +94,23 @@ def records_for(op) -> List[dict]:
             want = np.asarray(op.reference(*args, **kw), np.float32)
             t = time_fn(lambda: op.reference(*args, **kw))
             pred_us = traits.traffic_bytes / hw.mem_bw * 1e6
+            plan = (sharded.plan(op, *args, **kw)
+                    if sharded is not None else None)
+            # engine-invariant: the split and its byte accounting
+            # depend only on the call shape, so slice + re-derive the
+            # per-shard traits once per (size, dtype), not per engine
+            shard_field = (_shard_spec_field(op, plan, args, kw, hw)
+                           if plan is not None else None)
             for engine in sorted(op.engines):
                 # runs with the tuned tile config when one is cached --
                 # the correctness check covers the tiles we'd deploy
-                got = np.asarray(op(*args, engine=engine, **kw), np.float32)
+                if sharded is not None:
+                    run = sharded.run(op, *args, engine=engine,
+                                      plan=plan, **kw)
+                    got = np.asarray(run.out, np.float32)
+                else:
+                    got = np.asarray(op(*args, engine=engine, **kw),
+                                     np.float32)
                 err = float(np.max(np.abs(got - want)))
                 recs.append({
                     "kernel": op.name,
@@ -77,40 +129,68 @@ def records_for(op) -> List[dict]:
                     "pred_us_v5e": round(pred_us, 3),
                     "mxu_ceiling": advice.max_speedup_matrix,
                     "tile_config": _tile_config_field(op, engine, dtype),
+                    "mesh_shape": [mesh] if mesh > 1 else None,
+                    "shard_spec": shard_field,
                 })
     return recs
 
 
 def rows(names: Optional[Iterable[str]] = None,
          json_dir: Optional[str] = "runs",
-         tuned: Optional[str] = None) -> List[dict]:
+         tuned: Optional[str] = None,
+         mesh: int = 1) -> List[dict]:
     if tuned is not None:
         # sweep with tuned tile configs: dispatch consults the cache
         # for every launch and each record says which tiles it used
         DEFAULT_DISPATCHER.load_tuned(tuned)
-    wanted = set(names) if names is not None else None
+    mesh = max(1, int(mesh))
+    # the dispatcher plans shard specs onto its memoized Advice for the
+    # sweep's mesh width (restored after: rows() must not leak mesh
+    # state into later in-process callers)
+    prior_mesh = DEFAULT_DISPATCHER.mesh_shards
+    DEFAULT_DISPATCHER.set_mesh(mesh)
+    try:
+        wanted = set(names) if names is not None else None
+        out = []
+        for op in registry.all_ops():
+            if wanted is not None and op.name not in wanted:
+                continue
+            recs = records_for(op, mesh=mesh)
+            if json_dir:
+                env = bench_env(interpret=True,
+                                hw_model=DEFAULT_DISPATCHER.hw.name)
+                if mesh > 1:
+                    env["mesh_shape"] = [mesh]
+                write_json(op.name, recs, json_dir, env=env, mesh=mesh)
+            out.extend(_csv_rows(recs, mesh))
+        return out
+    finally:
+        DEFAULT_DISPATCHER.set_mesh(prior_mesh)
+
+
+def _csv_rows(recs: List[dict], mesh: int) -> List[dict]:
+    """The stdout CSV projection of one kernel's sweep records."""
     out = []
-    for op in registry.all_ops():
-        if wanted is not None and op.name not in wanted:
-            continue
-        recs = records_for(op)
-        if json_dir:
-            env = bench_env(interpret=True, hw_model=DEFAULT_DISPATCHER.hw.name)
-            write_json(op.name, recs, json_dir, env=env)
-        for r in recs:
-            cfg = r.get("tile_config")
-            tiles = "" if not cfg else ";tiles=" + ",".join(
-                f"{k}={v}" for k, v in sorted(cfg["params"].items()))
-            out.append({
-                "name": (f"{r['kernel']}/{r['engine']}/n={r['size']}/"
-                         f"{r['dtype']}"),
-                "us_per_call": f"{r['ref_us_per_call']:.1f}",
-                "derived": (f"pred_us_v5e={r['pred_us_v5e']};"
-                            f"I={r['intensity']:.4f};"
-                            f"auto={r['engine_auto']};"
-                            f"mxu_ceiling={r['mxu_ceiling']:.4f}x;"
-                            f"err={r['max_err']:.2e}" + tiles),
-            })
+    for r in recs:
+        cfg = r.get("tile_config")
+        tiles = "" if not cfg else ";tiles=" + ",".join(
+            f"{k}={v}" for k, v in sorted(cfg["params"].items()))
+        spec = r.get("shard_spec")
+        shard = "" if not spec else (
+            f";shards={spec['num_shards']};halo={spec['halo']};"
+            f"agg/total={spec['agg_bytes'] / spec['total_bytes']:.3f}")
+        name = f"{r['kernel']}/{r['engine']}/n={r['size']}/{r['dtype']}"
+        if mesh > 1:
+            name += f"/mesh={mesh}"
+        out.append({
+            "name": name,
+            "us_per_call": f"{r['ref_us_per_call']:.1f}",
+            "derived": (f"pred_us_v5e={r['pred_us_v5e']};"
+                        f"I={r['intensity']:.4f};"
+                        f"auto={r['engine_auto']};"
+                        f"mxu_ceiling={r['mxu_ceiling']:.4f}x;"
+                        f"err={r['max_err']:.2e}" + tiles + shard),
+        })
     return out
 
 

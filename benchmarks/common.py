@@ -29,8 +29,13 @@ __all__ = ["SCHEMA_VERSION", "SERVING_SCHEMA_VERSION", "Timing",
 #: metadata (jax version, device kind, interpret flag, hardware model);
 #: schema 3 adds a per-record ``tile_config`` field (the tuned tile
 #: params the launch used plus the tuner's tuned-vs-default timings,
-#: or null when dispatch fell back to static defaults).
-SCHEMA_VERSION = 3
+#: or null when dispatch fell back to static defaults); schema 4 is
+#: the *serving* record format (see SERVING_SCHEMA_VERSION); schema 5
+#: adds the mesh fields — per-record ``mesh_shape`` (the requested
+#: mesh, e.g. ``[2]``) and ``shard_spec`` (the ShardPlan the point ran
+#: under plus its traffic accounting), both null for single-device
+#: sweep points.
+SCHEMA_VERSION = 5
 
 #: Version of the serving record file format (``BENCH_serve_*.json``):
 #: schema 4 marks a ``"kind": "serving"`` set whose records are
@@ -87,30 +92,41 @@ def _write_record_file(filename: str, kernel: str, schema: int,
 
 
 def write_json(kernel: str, records: List[dict], out_dir: str = "runs",
-               env: Optional[dict] = None) -> str:
+               env: Optional[dict] = None, mesh: int = 1) -> str:
     """Write machine-readable per-kernel records to BENCH_<kernel>.json.
 
-    Schema 3: ``{"schema": 3, "kernel": ..., "env": {...}, "records":
+    Schema 5: ``{"schema": 5, "kernel": ..., "env": {...}, "records":
     [...]}`` with one record per (engine, size, dtype) sweep point
-    (including its ``tile_config``, if tuned) so the perf trajectory is
-    diffable across PRs and auditable by the ``repro.report`` claim
-    checks.
+    (including its ``tile_config``, if tuned, and its
+    ``mesh_shape``/``shard_spec`` when swept under a mesh) so the perf
+    trajectory is diffable across PRs and auditable by the
+    ``repro.report`` claim checks.  Mesh sweeps (``mesh > 1``) land in
+    ``BENCH_<kernel>_mesh<N>.json`` beside the single-device baseline
+    instead of clobbering it — the compare gate joins the two kinds of
+    points on distinct keys.
     """
-    return _write_record_file(f"BENCH_{kernel}.json", kernel,
-                              SCHEMA_VERSION, records, out_dir, env)
+    name = (f"BENCH_{kernel}.json" if mesh <= 1
+            else f"BENCH_{kernel}_mesh{mesh}.json")
+    return _write_record_file(name, kernel, SCHEMA_VERSION, records,
+                              out_dir, env)
 
 
 def write_serving_json(kernel: str, records: List[dict],
                        out_dir: str = "runs",
-                       env: Optional[dict] = None) -> str:
+                       env: Optional[dict] = None, mesh: int = 1) -> str:
     """Write one kernel's serving sessions to BENCH_serve_<kernel>.json.
 
     Schema 4: ``{"schema": 4, "kind": "serving", "kernel": ..., "env":
     {...}, "records": [...]}`` with one record per (engine, workload,
     size, dtype) session, consumed by ``repro.report`` (serving claim
     checks + REPORT.md serving section) and gated on p99/goodput by
-    ``benchmarks/compare.py --kind serving``.
+    ``benchmarks/compare.py --kind serving``.  Mesh sessions
+    (``mesh > 1``) land in ``BENCH_serve_<kernel>_mesh<N>.json`` beside
+    the single-device baseline instead of clobbering it, mirroring the
+    bench-sweep convention.
     """
-    return _write_record_file(f"BENCH_serve_{kernel}.json", kernel,
-                              SERVING_SCHEMA_VERSION, records, out_dir,
-                              env, extra={"kind": "serving"})
+    name = (f"BENCH_serve_{kernel}.json" if mesh <= 1
+            else f"BENCH_serve_{kernel}_mesh{mesh}.json")
+    return _write_record_file(name, kernel, SERVING_SCHEMA_VERSION,
+                              records, out_dir, env,
+                              extra={"kind": "serving"})

@@ -3,7 +3,8 @@
 Usage::
 
     python -m benchmarks.compare BASELINE_DIR CANDIDATE_DIR \
-        [--threshold 0.25] [--kernels scale,triad] [--kind all]
+        [--threshold 0.25] [--kernels scale,triad] [--kind all] \
+        [--mesh all|N]
 
 Compares candidate records against the baseline and exits non-zero
 when
@@ -16,19 +17,26 @@ when
   §6 routing, oracle accuracy, Eq. 4 boundedness — §6-under-load,
   percentile and goodput consistency for serving records),
 * a joined serving session pair disagrees on its load knobs
-  (rate/duration/SLO/seed — sessions under different offered load are
-  not comparable, so drifted defaults fail loudly instead of gating
-  noise), or
+  (rate/duration/SLO/seed/mesh width — sessions under different
+  offered load or sharding are not comparable, so drifted defaults
+  fail loudly instead of gating noise), or
 * a baseline point disappears from the candidate set (lost coverage is
-  a regression too).
+  a regression too — including a lost mesh width, since the shard
+  count is part of the bench join key).
 
-Bench sweep points join on (kernel, engine, size, dtype); serving
-sessions on (kernel, engine, workload, size, dtype).  ``--kind``
+Bench sweep points join on (kernel, engine, size, dtype, mesh width) —
+a 2-way-mesh point only ever gates against the 2-way baseline, and a
+clamped sweep (a mesh wider than the kernel's split extent) still
+joins the width it was requested at; serving sessions join on
+(kernel, engine, workload, size, dtype).  ``--kind``
 restricts the gate to one record kind (``bench``/``serving``; default
 ``all``) so CI can gate a fast kernel sweep and a serve smoke run
-against different candidate directories.  ``--kernels`` restricts both
-sides to a comma-separated subset.  Speed-ups and new points are
-reported but never fail the gate.
+against different candidate directories; ``--mesh N`` restricts the
+bench side to points sharded N ways (``--mesh 1`` = the single-device
+sweep only) so a partial candidate sweep is not blamed for the mesh
+widths it never ran — the default ``all`` demands full mesh coverage.
+``--kernels`` restricts both sides to a comma-separated subset.
+Speed-ups and new points are reported but never fail the gate.
 
 On failure the log ends with a per-kernel summary table (compared
 points, missing points, perf/goodput regressions, claim violations,
@@ -100,7 +108,8 @@ class GateResult:
 
 
 def _index(recsets: Iterable[RecordSet], which: str,
-           kernels: Optional[set] = None) -> Dict[Key, Record]:
+           kernels: Optional[set] = None,
+           mesh: Optional[int] = None) -> Dict[Key, Record]:
     out: Dict[Key, Record] = {}
     for rs in recsets:
         if rs.kind != which:
@@ -108,6 +117,12 @@ def _index(recsets: Iterable[RecordSet], which: str,
         if kernels is not None and rs.kernel not in kernels:
             continue
         for rec in rs.records:
+            # filter on the requested mesh width, matching the join
+            # key: a clamped sweep (fewer effective shards than the
+            # mesh asked for) still belongs to the width it ran under
+            if mesh is not None and which == "bench" \
+                    and rec.mesh_devices != mesh:
+                continue
             out[rec.point] = rec
     return out
 
@@ -162,11 +177,13 @@ def _gate_metric(key, old: float, new: float, metric: str, unit: str,
 
 def gate(baseline_dir: str, candidate_dir: str, threshold: float = 0.25,
          kernels: Optional[Iterable[str]] = None,
-         kind: str = "all") -> GateResult:
+         kind: str = "all", mesh: Optional[int] = None) -> GateResult:
     """Run the full gate and return structured per-kernel results.
 
     ``kind`` selects which record kinds participate: 'bench' sweep
-    points, 'serving' session records, or 'all' (both).
+    points, 'serving' session records, or 'all' (both).  ``mesh``
+    restricts bench points to one shard count (None = every mesh
+    width the baseline covers).
     """
     if kind not in KINDS:
         raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
@@ -180,8 +197,8 @@ def gate(baseline_dir: str, candidate_dir: str, threshold: float = 0.25,
     empty = True
 
     if kind in ("all", "bench"):
-        base = _index(base_sets, "bench", wanted)
-        cand = _index(cand_sets, "bench", wanted)
+        base = _index(base_sets, "bench", wanted, mesh)
+        cand = _index(cand_sets, "bench", wanted, mesh)
         empty = empty and not base
         for key in _diff_points(base, cand, "sweep", failures):
             compared[key[0]] = compared.get(key[0], 0) + 1
@@ -193,6 +210,13 @@ def gate(baseline_dir: str, candidate_dir: str, threshold: float = 0.25,
         base = _index(base_sets, "serving", wanted)
         cand = _index(cand_sets, "serving", wanted)
         empty = empty and not base
+
+        def _knob(rec, field):
+            value = getattr(rec, field)
+            if field == "num_shards":
+                return value or 1  # legacy records: None = unsharded
+            return value
+
         for key in _diff_points(base, cand, "serving", failures):
             compared[key[0]] = compared.get(key[0], 0) + 1
             # the join key carries no load knobs: refuse to compare
@@ -200,10 +224,10 @@ def gate(baseline_dir: str, candidate_dir: str, threshold: float = 0.25,
             # drifted default would otherwise gate p99/goodput across
             # incomparable traffic (false reds and false greens alike)
             mismatched = [
-                f"{f}={getattr(base[key], f)} vs {getattr(cand[key], f)}"
+                f"{f}={_knob(base[key], f)} vs {_knob(cand[key], f)}"
                 for f in ("rate_rps", "duration_s", "slo_ms", "seed",
-                          "max_batch", "max_wait_ms")
-                if getattr(base[key], f) != getattr(cand[key], f)]
+                          "max_batch", "max_wait_ms", "num_shards")
+                if _knob(base[key], f) != _knob(cand[key], f)]
             if mismatched:
                 failures.append(Failure(
                     "config", key[0],
@@ -224,7 +248,7 @@ def gate(baseline_dir: str, candidate_dir: str, threshold: float = 0.25,
             "empty", "",
             f"empty comparison: no baseline records in {baseline_dir!r} "
             f"match kernels={sorted(wanted) if wanted else 'all'} "
-            f"kind={kind}"))
+            f"kind={kind} mesh={mesh if mesh is not None else 'all'}"))
 
     for v in violations(check_records(cand_sets)):
         failures.append(Failure(
@@ -236,10 +260,10 @@ def gate(baseline_dir: str, candidate_dir: str, threshold: float = 0.25,
 
 def compare(baseline_dir: str, candidate_dir: str, threshold: float = 0.25,
             kernels: Optional[Iterable[str]] = None,
-            kind: str = "all") -> List[str]:
+            kind: str = "all", mesh: Optional[int] = None) -> List[str]:
     """Return the list of failure messages (empty = gate passes)."""
     return gate(baseline_dir, candidate_dir, threshold=threshold,
-                kernels=kernels, kind=kind).messages
+                kernels=kernels, kind=kind, mesh=mesh).messages
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -254,11 +278,23 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.add_argument("--kind", default="all", choices=KINDS,
                    help="record kind to gate: bench sweeps, serving "
                         "sessions, or all (default)")
+    p.add_argument("--mesh", default="all",
+                   help="bench mesh filter: a shard count (1 = the "
+                        "single-device sweep) or 'all' to demand every "
+                        "baseline mesh width (default)")
     args = p.parse_args(argv)
     kernels = args.kernels.split(",") if args.kernels else None
+    if args.mesh == "all":
+        mesh = None
+    else:
+        try:
+            mesh = int(args.mesh)
+        except ValueError:
+            raise SystemExit(
+                f"--mesh must be an integer or 'all', got {args.mesh!r}")
     result = gate(args.baseline, args.candidate,
                   threshold=args.threshold, kernels=kernels,
-                  kind=args.kind)
+                  kind=args.kind, mesh=mesh)
     for f in result.failures:
         print(f"FAIL: {f.message}", file=sys.stderr)
     if result.failures:

@@ -8,6 +8,8 @@ list to maintain.
   bounds         -- Table 1 + Eq. 14/23/24 (theory)
   roofline       -- Fig. 2 (two-ceiling roofline placements)
   kernels        -- every registered kernel x engine x size x dtype
+  sweep          -- alias for ``kernels`` (the name the mesh walkthrough
+                    in docs/sharding.md uses)
   <kernel name>  -- one registered kernel (e.g. ``scale``, ``triad``)
   tune           -- tile-config autotuner -> tuned.json (see
                     ``benchmarks.tune`` for its flags)
@@ -18,9 +20,23 @@ list to maintain.
 
 Prints ``name,us_per_call,derived`` CSV rows; kernel sweeps also write
 ``runs/BENCH_<kernel>.json`` (override the directory with ``--out DIR``
-to produce a candidate set for ``benchmarks/compare.py``; pass
-``--tuned tuned.json`` to sweep with tuned tile configs and record
-them per sweep point).
+to produce a candidate set for ``benchmarks/compare.py``).
+
+``--tuned tuned.json`` sweeps with tuned tile configs: dispatch
+consults the cache (schema-1 ``tuned.json``; entries keyed by
+(kernel, engine, dtype, hw_model) carrying ``params`` plus the tuner's
+``best_us``/``default_us`` timings -- see docs/tuning.md) for every
+launch, and each sweep point records the tiles it ran under in its
+``tile_config`` field as ``params`` plus ``tuned_us``/``default_us``,
+where ``tuned_us`` is the cache entry's ``best_us`` restated under the
+record-side name.
+
+``--mesh N`` sweeps under an N-way data-axis mesh (``repro.sharding``):
+engine variants execute shard by shard (halo exchange included), and
+each schema-5 record carries ``mesh_shape`` + ``shard_spec`` with the
+plan's traffic accounting for the shard claims in ``repro.report``.
+Mesh records land in ``BENCH_<kernel>_mesh<N>.json`` beside the
+single-device baseline.
 """
 from __future__ import annotations
 
@@ -47,6 +63,19 @@ def _report(argv: List[str]) -> None:
         print(f"wrote {path}")
 
 
+def _take_flag(argv: List[str], flag: str, what: str) -> Optional[str]:
+    """Pop ``flag VALUE`` out of argv, returning VALUE (or None)."""
+    if flag not in argv:
+        return None
+    i = argv.index(flag)
+    try:
+        value = argv[i + 1]
+    except IndexError:
+        raise SystemExit(f"{flag} requires {what}")
+    del argv[i:i + 2]
+    return value
+
+
 def main(argv: Optional[List[str]] = None) -> None:
     argv = list(sys.argv[1:] if argv is None else argv)
     if argv and argv[0] == "tune":
@@ -55,30 +84,28 @@ def main(argv: Optional[List[str]] = None) -> None:
         raise SystemExit(tune.main(argv[1:]))
     if argv and argv[0] == "serve":
         # the serving driver has its own argparse surface (workload,
-        # rate, duration, ...)
+        # rate, duration, mesh, ...)
         from . import serve
         raise SystemExit(serve.main(argv[1:]))
     out_dir, out_given = "runs", "--out" in argv
-    if out_given:
-        i = argv.index("--out")
-        try:
-            out_dir = argv[i + 1]
-        except IndexError:
-            raise SystemExit("--out requires a directory argument")
-        del argv[i:i + 2]
-    tuned = None
-    if "--tuned" in argv:
-        i = argv.index("--tuned")
-        try:
-            tuned = argv[i + 1]
-        except IndexError:
-            raise SystemExit("--tuned requires a tuned.json path argument")
-        del argv[i:i + 2]
+    taken = _take_flag(argv, "--out", "a directory argument")
+    if taken is not None:
+        out_dir = taken
+    tuned = _take_flag(argv, "--tuned", "a tuned.json path argument")
+    mesh_arg = _take_flag(argv, "--mesh", "a shard-count argument")
+    try:
+        mesh = 1 if mesh_arg is None else int(mesh_arg)
+    except ValueError:
+        raise SystemExit(f"--mesh requires an integer, got {mesh_arg!r}")
+    if mesh < 1:
+        raise SystemExit(f"--mesh must be >= 1, got {mesh}")
     if argv and argv[0] == "report":
         if tuned is not None:
             # the report is a pure function of runs/; a tuned cache
             # only affects sweeps, so silently ignoring it would lie
             raise SystemExit("--tuned only applies to kernel sweeps")
+        if mesh_arg is not None:
+            raise SystemExit("--mesh only applies to kernel sweeps")
         # `report runs-ci` and `report --out runs-ci` both read runs-ci
         if out_given and len(argv) > 1:
             raise SystemExit("report: pass the records dir positionally "
@@ -87,23 +114,28 @@ def main(argv: Optional[List[str]] = None) -> None:
         return
     kernel_names = set(registry.names())
     which = argv or (sorted(THEORY) + ["kernels"])
-    sweeps = any(k == "kernels" or k in kernel_names for k in which)
+    sweeps = any(k in ("kernels", "sweep") or k in kernel_names
+                 for k in which)
     if out_given and not sweeps:
         raise SystemExit("--out only applies to kernel sweeps or report")
     if tuned is not None and not sweeps:
         raise SystemExit("--tuned only applies to kernel sweeps")
+    if mesh_arg is not None and not sweeps:
+        raise SystemExit("--mesh only applies to kernel sweeps")
     print("name,us_per_call,derived")
     for key in which:
         if key in THEORY:
             emit(THEORY[key].rows())
-        elif key == "kernels":
-            emit(bench_kernels.rows(json_dir=out_dir, tuned=tuned))
+        elif key in ("kernels", "sweep"):
+            emit(bench_kernels.rows(json_dir=out_dir, tuned=tuned,
+                                    mesh=mesh))
         elif key in kernel_names:
-            emit(bench_kernels.rows([key], json_dir=out_dir, tuned=tuned))
+            emit(bench_kernels.rows([key], json_dir=out_dir, tuned=tuned,
+                                    mesh=mesh))
         else:
             raise SystemExit(
                 f"unknown benchmark {key!r}; have "
-                f"{sorted(THEORY) + ['kernels', 'report', 'serve', 'tune'] + sorted(kernel_names)}")
+                f"{sorted(THEORY) + ['kernels', 'report', 'serve', 'sweep', 'tune'] + sorted(kernel_names)}")
 
 
 if __name__ == "__main__":

@@ -54,6 +54,10 @@ def _parse(argv: Optional[List[str]]) -> argparse.Namespace:
                    help="request dtype (default float32)")
     p.add_argument("--seed", type=int, default=0,
                    help="loadgen seed; sessions replay exactly (default 0)")
+    p.add_argument("--mesh", type=int, default=1,
+                   help="data-axis mesh width: every launch splits into "
+                        "this many shards and batches are charged the "
+                        "shard-parallel compute time (default 1)")
     p.add_argument("--max-batch", type=int, default=8,
                    help="continuous-batching size trigger (default 8)")
     p.add_argument("--max-wait-ms", type=float, default=20.0,
@@ -107,6 +111,8 @@ def main(argv: Optional[List[str]] = None) -> int:
                          max_wait_s=args.max_wait_ms / 1e3)
     slo = SLO(latency_ms=args.slo_ms)
     env = bench_env(interpret=True, hw_model=DEFAULT_DISPATCHER.hw.name)
+    if args.mesh > 1:
+        env["mesh_shape"] = [args.mesh]
     print("kernel,engine,workload,completed,p50_ms,p99_ms,goodput_rps,"
           "slo_attainment")
     for kernel in names:
@@ -120,14 +126,16 @@ def main(argv: Optional[List[str]] = None) -> int:
                 kernel=kernel, workload=args.workload, engine=engine,
                 rate_rps=args.rate, duration_s=args.duration,
                 size=args.size, dtype=args.dtype, seed=args.seed,
-                policy=policy, slo=slo, trace_path=args.trace)
+                policy=policy, slo=slo, trace_path=args.trace,
+                num_shards=args.mesh)
             _, summary, record = run_session(cfg, source=source)
             records.append(record)
             print(f"{kernel},{record['engine']},{args.workload},"
                   f"{summary.completed},{summary.p50_ms:.3f},"
                   f"{summary.p99_ms:.3f},{summary.goodput_rps:.3f},"
                   f"{summary.slo_attainment:.4f}")
-        path = write_serving_json(kernel, records, args.out, env=env)
+        path = write_serving_json(kernel, records, args.out, env=env,
+                                  mesh=args.mesh)
         print(f"# wrote {path}")
     return 0
 

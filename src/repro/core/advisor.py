@@ -12,7 +12,7 @@ to pick between their MXU and VPU implementations (``engine='auto'``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 from .balance import machine_balance
 from .bounds import best_case_speedup, speedup_overlapped
@@ -36,6 +36,13 @@ class Advice:
     # tile choice is a bandwidth-saturation concern, orthogonal to the
     # engine decision this class owns.
     tile_config: Optional[Tuple[Tuple[str, int], ...]] = None
+    # how a mesh-configured dispatcher would split this call (a
+    # repro.sharding.plan.ShardSpec: kind/num_shards/axis/halo), or
+    # None for single-device dispatch.  Attached by Dispatcher.advise
+    # from its mesh setting, not here: a data-parallel shard keeps I
+    # (Eq. 2) and therefore this engine decision unchanged — per-shard
+    # bandwidth still sets the roof.
+    shard_spec: Optional[Any] = None
 
     def __str__(self) -> str:  # pragma: no cover - cosmetic
         return (f"[{self.kernel}] I={self.intensity:.4g} -> {self.engine} "

@@ -179,9 +179,11 @@ class Dispatcher:
     """
 
     def __init__(self, advisor: Optional[EngineAdvisor] = None,
-                 tuning: Optional[TuningPolicy] = None):
+                 tuning: Optional[TuningPolicy] = None,
+                 mesh_shards: int = 1):
         self.advisor = advisor if advisor is not None else DEFAULT_ADVISOR
         self.tuning = tuning if tuning is not None else TuningPolicy()
+        self._mesh_shards = max(1, int(mesh_shards))
         self._cache: Dict[Hashable, Advice] = {}
         self._hits = 0
         self._misses = 0
@@ -190,6 +192,29 @@ class Dispatcher:
     def hw(self):
         """The advisor's HardwareSpec (paper Table 1 platform model)."""
         return self.advisor.hw
+
+    @property
+    def mesh_shards(self) -> int:
+        """How many mesh shards Advice is planned for (1 = no mesh)."""
+        return self._mesh_shards
+
+    def set_mesh(self, num_shards: int) -> None:
+        """Configure the mesh width Advice plans shard splits for.
+
+        With ``num_shards > 1`` every memoized Advice carries the
+        ``ShardSpec`` the sharding layer (``repro.sharding.plan``)
+        derives for its call — the paper's §6 decision is then a
+        per-shard statement, which Eq. 2's intensity invariance under
+        data-parallel splitting keeps identical to the per-device one.
+        The Advice cache embeds shard specs, so changing the mesh
+        drops it.
+        """
+        num_shards = int(num_shards)
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        if num_shards != self._mesh_shards:
+            self._mesh_shards = num_shards
+            self.cache_clear()
 
     # -- advice ------------------------------------------------------------
 
@@ -214,7 +239,8 @@ class Dispatcher:
         and the claims report can say *which* tiles produced a number.
         """
         key_fn = op.cache_key or default_cache_key
-        key = (op.name, self.hw.name, key_fn(*args, **kwargs))
+        key = (op.name, self.hw.name, self._mesh_shards,
+               key_fn(*args, **kwargs))
 
         def make() -> Advice:
             advice = self.advisor.advise(op.traits(*args, **kwargs))
@@ -225,6 +251,15 @@ class Dispatcher:
                 advice = dataclasses.replace(
                     advice,
                     tile_config=tuple(sorted(entry.params.items())))
+            if self._mesh_shards > 1:
+                # planned once per (kernel, shape, mesh) and memoized
+                # with the engine decision: steady-state sharded
+                # dispatch stays a dict hit (§6 in steady state)
+                from ..sharding.plan import spec_for
+                advice = dataclasses.replace(
+                    advice,
+                    shard_spec=spec_for(op, self._mesh_shards,
+                                        *args, **kwargs))
             return advice
 
         return self._memoized(key, make)

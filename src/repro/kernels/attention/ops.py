@@ -128,6 +128,9 @@ ATTENTION_OP = register(EngineOp(
     tile_space=ATTENTION_TILE_SPACE,
     tile_defaults={"block_s": DEFAULT_BLOCK_S},
     tune_proxy=_tune_proxy,
+    # mesh split: KV heads are independent (each attends to its own
+    # cache slice), so head-sharding is exact with no exchange
+    shard_kind="head",
 ))
 
 

@@ -62,6 +62,16 @@ class EngineOp:
     # (params, *args, **kwargs) -> pure-XLA computation honoring the tile
     # params: the off-hardware timing stand-in (repro.tuning.proxy)
     tune_proxy: Optional[Callable[..., Any]] = None
+    # -- mesh sharding (see repro.sharding / docs/sharding.md) ----------
+    # how this family splits across a data-axis mesh: 'data'
+    # (flattened elementwise ranges), 'rowblock' (contiguous row /
+    # block-row ranges, optionally with halo exchange), or 'head'
+    # (KV-head ranges for decode attention)
+    shard_kind: str = "data"
+    # (*args, **kwargs) -> halo rows each rowblock shard must borrow
+    # from its neighbours (e.g. t*r for a stencil at temporal depth t,
+    # paper Eq. 13); None = no halo
+    shard_halo: Optional[Callable[..., int]] = None
 
     def __call__(self, *args, engine: str = "auto", interpret: bool = True,
                  tile_config: Optional[Mapping[str, int]] = None,

@@ -53,6 +53,10 @@ SPMV_OP = register(EngineOp(
     bench_sizes=(256, 512),
     test_size=128,
     doc="block-ELL SpMV y = A x; I ~ 1/(2D) per stored element",
+    # mesh split: contiguous block-row ranges with x replicated per
+    # shard (no halo — block-rows are independent; the replicated x
+    # read is the honest aggregate-traffic cost the shard claims check)
+    shard_kind="rowblock",
 ))
 
 

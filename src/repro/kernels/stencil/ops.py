@@ -121,6 +121,11 @@ STENCIL_OP = register(EngineOp(
     tile_space=STENCIL_TILE_SPACE,
     tile_defaults={"block_rows": DEFAULT_BLOCK_ROWS},
     tune_proxy=_tune_proxy,
+    # mesh split: leading-axis row blocks; t fused steps at radius r
+    # need t*r halo rows from each neighbour (the Eq. 13 trapezoid),
+    # which the sharding layer slices in and crops back out
+    shard_kind="rowblock",
+    shard_halo=lambda u, spec, steps=1, **kw: steps * spec.radius,
 ))
 
 

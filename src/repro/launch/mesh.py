@@ -8,7 +8,12 @@ importing this module touches no jax device state.  The single-pod mesh is
 
 ``make_auto_mesh``/``mesh_context`` paper over the jax 0.4 -> 0.5+ API
 drift (``axis_types=``/``jax.set_mesh`` only exist on newer jax) so the
-launchers and the multi-device tests run on either.
+launchers, the sharded kernel executor (``repro.sharding.executor``),
+and the multi-device tests run on either.  ``data_mesh`` is the
+single-axis mesh the mesh-sharded kernel path runs under: it clamps to
+the devices this process actually has, so an off-hardware container
+(one XLA CPU device) still executes N-way ShardPlans — shard by shard
+— under a degenerate ``(1,)`` mesh.
 """
 from __future__ import annotations
 
@@ -32,7 +37,21 @@ def mesh_context(mesh):
     return mesh
 
 
+def data_mesh(num_shards: int):
+    """The 1-D "data" mesh for mesh-sharded kernel execution.
+
+    Axis width = min(num_shards, available devices), never less than 1:
+    the ShardPlan still splits ``num_shards`` ways, but the mesh only
+    claims devices that exist (a single-device container gets ``(1,)``
+    and runs shards back-to-back; the scheduler's shard-parallel
+    accounting is what models the N-device roof).
+    """
+    width = max(1, min(int(num_shards), len(jax.devices())))
+    return make_auto_mesh((width,), ("data",))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
+    """The 256-chip single-pod (or 512-chip two-pod) serving mesh."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return make_auto_mesh(shape, axes)

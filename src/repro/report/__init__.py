@@ -6,13 +6,16 @@ validated by measurements.  This package closes the loop the raw
 ``runs/BENCH_*.json`` files leave open:
 
 1. :mod:`repro.report.records` ingests every benchmark record file
-   (schema 1 legacy lists, schema 2/3 env-annotated sweep sets, and
-   schema-4 **serving** session sets from ``benchmarks.run serve``),
+   (schema 1 legacy lists, schema 2/3 env-annotated sweep sets,
+   schema-4 **serving** session sets from ``benchmarks.run serve``,
+   and schema-5 **mesh** sweep sets from ``benchmarks.run sweep
+   --mesh N``),
 2. :mod:`repro.report.claims` joins each record back to the analytic
    layer and verifies the paper's claims (Eq. 4 boundedness, the
    Eq. 17/23/24 ceiling, §6 engine routing — per call for bench
    records, in steady state under load for serving records, plus
-   latency-percentile and goodput consistency),
+   latency-percentile and goodput consistency, plus per-shard ceiling
+   and aggregate-bandwidth consistency for mesh records),
 3. :mod:`repro.report.render` publishes a deterministic ``REPORT.md``
    plus per-kernel pages under ``docs/benchmarks/``.
 
@@ -20,16 +23,18 @@ Entry point: ``python -m benchmarks.run report`` (CI regenerates and
 diffs the output; ``benchmarks/compare.py`` gates regressions — µs per
 call for sweeps, p99/goodput for serving sessions).
 """
-from .claims import (CLAIMS, SERVING_CLAIMS, TOLERANCE, ClaimResult,
-                     ceiling_bound, check_record, check_records,
-                     check_serving_record, hw_for, violations)
+from .claims import (CLAIMS, SERVING_CLAIMS, SHARD_CLAIMS, TOLERANCE,
+                     ClaimResult, ceiling_bound, check_record,
+                     check_records, check_serving_record, hw_for,
+                     violations)
 from .records import (BenchRecord, RecordSet, ServingRecord, load_dir,
                       load_file)
 from .render import (page_name, render_kernel_page, render_report,
                      render_serving_page, write_report)
 
 __all__ = [
-    "CLAIMS", "SERVING_CLAIMS", "TOLERANCE", "BenchRecord", "ClaimResult",
+    "CLAIMS", "SERVING_CLAIMS", "SHARD_CLAIMS", "TOLERANCE",
+    "BenchRecord", "ClaimResult",
     "RecordSet", "ServingRecord", "ceiling_bound", "check_record",
     "check_records", "check_serving_record", "hw_for", "load_dir",
     "load_file", "page_name", "render_kernel_page", "render_report",

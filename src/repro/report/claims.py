@@ -24,6 +24,27 @@ the SLO-attainment and completion accounting (goodput =
 attained/duration, never exceeding throughput) — so a hand-edited or
 buggy serving record cannot publish an impossible latency/goodput
 story or a ceiling the theory forbids.
+
+Schema-5 sweep points carrying a ``shard_spec`` additionally pass the
+**shard claims** (:data:`SHARD_CLAIMS`), which pin the paper's
+per-device verdict onto every shard of a mesh execution:
+
+* **shard_ceiling** — the spec is sane (known kind, 1 ≤ num_shards ≤
+  mesh devices, halo ≥ 0), the worst shard's intensity never exceeds
+  the unsharded intensity (splitting W and Q together cannot raise I;
+  halo/replication traffic only lowers it), a memory-bound kernel
+  stays memory-bound per shard (I_shard < B_vector: per-shard
+  bandwidth, not the compute engine, sets the roof), and the recorded
+  matrix-engine ceiling still obeys Eq. 23/24 evaluated at the
+  *per-shard* intensity.
+* **shard_traffic** — aggregate-bandwidth consistency: the bytes all
+  shards move sum to at least the unsharded total (sharding never
+  invents traffic savings), the worst shard times num_shards covers
+  the aggregate (max × N ≥ Σ), no single shard moves more bytes than
+  the unsharded kernel (replication/halo can at most re-read the
+  whole input, capping the aggregate at N × total), and a halo-free
+  data/head split moves *exactly* the unsharded bytes — any overhead
+  must come from declared halo rows or rowblock operand replication.
 """
 from __future__ import annotations
 
@@ -37,8 +58,8 @@ from ..core.hw import PLATFORMS, TPU_V5E, HardwareSpec
 from ..core.intensity import KernelTraits
 from .records import BenchRecord, RecordSet, ServingRecord
 
-__all__ = ["CLAIMS", "ClaimResult", "SERVING_CLAIMS", "TOLERANCE",
-           "ceiling_bound", "check_record", "check_records",
+__all__ = ["CLAIMS", "ClaimResult", "SERVING_CLAIMS", "SHARD_CLAIMS",
+           "TOLERANCE", "ceiling_bound", "check_record", "check_records",
            "check_serving_record", "hw_for", "violations"]
 
 #: Claim identifiers, in report order.
@@ -47,6 +68,10 @@ CLAIMS = ("ceiling", "routing", "accuracy", "boundedness")
 #: Serving-record claim identifiers, in report order.
 SERVING_CLAIMS = ("ceiling", "routing", "boundedness", "percentiles",
                   "goodput")
+
+#: Extra claims for sweep points that executed under a mesh (schema 5
+#: records with a ``shard_spec``), in report order.
+SHARD_CLAIMS = ("shard_ceiling", "shard_traffic")
 
 #: Max abs error allowed between an engine variant and its oracle.
 #: bfloat16 has an 8-bit mantissa, so elementwise results on O(10)
@@ -133,6 +158,65 @@ def _analytic_checks(rec, hw: HardwareSpec,
     return results
 
 
+def _shard_checks(rec: BenchRecord,
+                  hw: HardwareSpec) -> List[ClaimResult]:
+    """The SHARD_CLAIMS for one mesh sweep point (see module docs).
+
+    Re-derives the Eq. 23/24 ceiling at the *per-shard* intensity and
+    bounds the aggregate traffic against the unsharded Q, so a record
+    cannot claim a mesh execution that either beats the per-device
+    ceiling on any shard or quietly moves fewer bytes than the
+    unsharded kernel — the two ways a sharded "speedup" could lie.
+    """
+    spec = dict(rec.shard_spec or {})
+    n = int(spec.get("num_shards", 0))
+    halo = int(spec.get("halo", -1))
+    kind = str(spec.get("kind", ""))
+    total = float(spec.get("total_bytes", 0.0))
+    agg = float(spec.get("agg_bytes", 0.0))
+    worst = float(spec.get("shard_bytes", 0.0))
+    i_shard = float(spec.get("shard_intensity", float("inf")))
+    b_vec = machine_balance(hw, "vector")
+    # rounding slack: byte totals are exact floats from the traits
+    # model, but allow 1e-6 relative for serialization round-trips
+    slack = 1e-6 * max(total, 1.0)
+
+    sane = (kind in ("data", "rowblock", "head")
+            and 1 <= n <= max(rec.mesh_devices, 1)
+            and halo >= 0)
+    i_ok = i_shard <= rec.intensity + _EPS
+    if rec.memory_bound:
+        bound = ceiling_bound(i_shard, hw)
+        ceil_ok = i_shard < b_vec and rec.mxu_ceiling <= bound + _EPS
+        detail = (f"kind={kind} shards={n}/{rec.mesh_devices} "
+                  f"I_shard={i_shard:.4g} < B_vec={b_vec:.4g}; "
+                  f"ceiling {rec.mxu_ceiling:.4g}x vs per-shard "
+                  f"Eq. 23/24 bound {bound:.4g}x")
+    else:
+        ceil_ok = rec.mxu_ceiling <= hw.alpha + _EPS
+        detail = (f"kind={kind} shards={n}/{rec.mesh_devices} "
+                  f"compute-bound: ceiling {rec.mxu_ceiling:.4g}x vs "
+                  f"alpha {hw.alpha:.4g}")
+    shard_ceiling = ClaimResult("shard_ceiling", rec,
+                                sane and i_ok and ceil_ok, detail)
+
+    traffic_ok = (agg >= total - slack
+                  and worst * n >= agg - slack
+                  # no shard moves more bytes than the unsharded
+                  # kernel (replication/halo can at most re-read the
+                  # whole input), which caps the aggregate at N x
+                  # total — a hand-edited 100x-traffic story fails here
+                  and worst <= total + slack
+                  and (halo > 0 or kind == "rowblock"
+                       or abs(agg - total) <= slack))
+    shard_traffic = ClaimResult(
+        "shard_traffic", rec, traffic_ok,
+        f"agg {agg:.4g} B vs total {total:.4g} B "
+        f"(overhead {agg / total - 1.0 if total else 0.0:+.2%}), "
+        f"worst shard {worst:.4g} B x {n}")
+    return [shard_ceiling, shard_traffic]
+
+
 def check_record(rec: BenchRecord,
                  hw: HardwareSpec = TPU_V5E) -> Tuple[ClaimResult, ...]:
     """Verify all four paper claims (Eq. 4, Eq. 17/23/24, §6) for one record.
@@ -140,6 +224,9 @@ def check_record(rec: BenchRecord,
     Returns one :class:`ClaimResult` per entry in :data:`CLAIMS`, in
     order, re-deriving the advisor's decision from the recorded
     intensity so a stale or hand-edited record cannot pass silently.
+    Mesh sweep points (schema 5 with a ``shard_spec``) additionally get
+    one result per entry in :data:`SHARD_CLAIMS` — the per-device
+    verdict re-checked per shard.
     """
     ceiling, routing, boundedness = _analytic_checks(rec, hw)
 
@@ -147,7 +234,10 @@ def check_record(rec: BenchRecord,
     accuracy = ClaimResult(
         "accuracy", rec, rec.max_err <= tol,
         f"max_err {rec.max_err:.3g} vs {rec.dtype} tolerance {tol:g}")
-    return (ceiling, routing, accuracy, boundedness)
+    out = [ceiling, routing, accuracy, boundedness]
+    if rec.shard_spec:
+        out.extend(_shard_checks(rec, hw))
+    return tuple(out)
 
 
 def check_serving_record(rec: ServingRecord,

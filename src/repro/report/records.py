@@ -1,7 +1,7 @@
 """Benchmark record ingestion for the claims report (paper §5 evidence).
 
 Loads every ``runs/BENCH_*.json`` produced by the benchmark harness
-into typed rows.  Four file schemas are accepted:
+into typed rows.  Five file schemas are accepted:
 
 * schema 1 (legacy) -- a bare JSON list of record dicts,
 * schema 2 -- ``{"schema": 2, "kernel": ..., "env": {...},
@@ -13,7 +13,13 @@ into typed rows.  Four file schemas are accepted:
 * schema 4 -- **serving** record sets (``"kind": "serving"``) from
   ``python -m benchmarks.run serve``: one :class:`ServingRecord` per
   (kernel, engine, workload, size, dtype) session with latency
-  percentiles (queue/compute split), goodput, and SLO attainment.
+  percentiles (queue/compute split), goodput, and SLO attainment,
+* schema 5 -- schema 3 plus the optional mesh fields: per-record
+  ``mesh_shape`` (the requested mesh, e.g. ``[2]``) and ``shard_spec``
+  (the ShardPlan the point executed under — kind/num_shards/axis/halo
+  — with its traffic accounting: per-shard bytes, aggregate vs.
+  unsharded bytes, worst per-shard intensity), both null for
+  single-device sweep points.
 
 Bench records are (kernel, engine, size, dtype) sweep points carrying
 the measured reference time, the max error vs. the oracle, and the
@@ -65,11 +71,43 @@ class BenchRecord:
     # "tuned_us": ..., "default_us": ..., "source": ...}); None means
     # the launch used the family's static tile defaults
     tile_config: Optional[Mapping[str, Any]] = None
+    # schema 5: the mesh the point was swept under ([N]) and the shard
+    # plan + traffic accounting it executed with; None = single device
+    mesh_shape: Optional[Tuple[int, ...]] = None
+    shard_spec: Optional[Mapping[str, Any]] = None
 
     @property
-    def point(self) -> Tuple[str, str, int, str]:
-        """The sweep-point key (kernel, engine, size, dtype)."""
-        return (self.kernel, self.engine, self.size, self.dtype)
+    def num_shards(self) -> int:
+        """Shards the point executed across (1 = unsharded sweep)."""
+        if not self.shard_spec:
+            return 1
+        return int(self.shard_spec.get("num_shards", 1))
+
+    @property
+    def mesh_devices(self) -> int:
+        """Devices the recorded mesh requested (1 = no mesh)."""
+        if not self.mesh_shape:
+            return 1
+        n = 1
+        for d in self.mesh_shape:
+            n *= int(d)
+        return n
+
+    @property
+    def point(self) -> Tuple[str, str, int, str, int]:
+        """The sweep-point key (kernel, engine, size, dtype, mesh).
+
+        The *requested* mesh width (``mesh_devices``) is part of the
+        key so the compare gate joins a 2-way-mesh point against the
+        2-way baseline — never against the single-device sweep — and a
+        lost mesh width is reported as missing coverage (a shard-count
+        regression), not silently merged.  Keyed on the request, not
+        the effective ``num_shards``: a clamped sweep (e.g. attention
+        4-way over 2 KV heads plans 2 shards) must still join its own
+        mesh-4 baseline rather than collide with a genuine 2-way sweep.
+        """
+        return (self.kernel, self.engine, self.size, self.dtype,
+                self.mesh_devices)
 
     @property
     def tile_params(self) -> Optional[Mapping[str, int]]:
@@ -142,13 +180,24 @@ class ServingRecord:
     # comparability contract the compare gate enforces on joined keys
     max_batch: Optional[int] = None
     max_wait_ms: Optional[float] = None
+    # mesh width the session's batches were sharded across (each batch
+    # charged shard-parallel compute); None/1 = unsharded.  Also part
+    # of the comparability contract: p99 under a 2-way mesh must never
+    # gate against a single-device baseline.
+    num_shards: Optional[int] = None
 
     @property
-    def point(self) -> Tuple[str, str, str, int, str]:
-        """Session key (kernel, engine, workload, size, dtype) — what
-        the ``benchmarks/compare.py`` p99/goodput gate joins on."""
+    def point(self) -> Tuple[str, str, str, int, str, int]:
+        """Session key (kernel, engine, workload, size, dtype, shards)
+        — what the ``benchmarks/compare.py`` p99/goodput gate joins on.
+
+        The mesh width is part of the key (legacy records without one
+        key as 1) so a sharded session never gates against — or
+        silently shadows — the single-device baseline when both live
+        in one records directory.
+        """
         return (self.kernel, self.engine, self.workload, self.size,
-                self.dtype)
+                self.dtype, self.num_shards or 1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,6 +215,21 @@ class RecordSet:
     path: str
     kind: str = "bench"
 
+    @property
+    def mesh_devices(self) -> int:
+        """Devices of the mesh this set was swept under (1 = no mesh).
+
+        Schema-5 mesh sweeps stamp ``mesh_shape`` into their
+        environment metadata; everything earlier is single-device.
+        """
+        shape = self.env.get("mesh_shape")
+        if not shape:
+            return 1
+        n = 1
+        for d in shape:
+            n *= int(d)
+        return n
+
 
 def _to_record(raw: Mapping[str, Any], path: str) -> BenchRecord:
     missing = [k for k in _REQUIRED if k not in raw]
@@ -179,6 +243,20 @@ def _to_record(raw: Mapping[str, Any], path: str) -> BenchRecord:
             raise ValueError(f"{path}: tile_config must be an object "
                              f"with a 'params' map, got {tile_config!r}")
         tile_config = dict(tile_config)
+    mesh_shape = raw.get("mesh_shape")
+    if mesh_shape is not None:
+        if not isinstance(mesh_shape, (list, tuple)) or not mesh_shape:
+            raise ValueError(f"{path}: mesh_shape must be a non-empty "
+                             f"list, got {mesh_shape!r}")
+        mesh_shape = tuple(int(d) for d in mesh_shape)
+    shard_spec = raw.get("shard_spec")
+    if shard_spec is not None:
+        if not isinstance(shard_spec, Mapping) or \
+                "num_shards" not in shard_spec:
+            raise ValueError(f"{path}: shard_spec must be an object "
+                             f"with a 'num_shards' field, got "
+                             f"{shard_spec!r}")
+        shard_spec = dict(shard_spec)
     return BenchRecord(
         kernel=str(raw["kernel"]),
         engine=str(raw["engine"]),
@@ -197,6 +275,8 @@ def _to_record(raw: Mapping[str, Any], path: str) -> BenchRecord:
         iters=(int(raw["iters"])
                if raw.get("iters") is not None else None),
         tile_config=tile_config,
+        mesh_shape=mesh_shape,
+        shard_spec=shard_spec,
     )
 
 
@@ -235,13 +315,15 @@ def _to_serving_record(raw: Mapping[str, Any], path: str) -> ServingRecord:
                  if raw.get("batches") is not None else None),
         max_batch=(int(raw["max_batch"])
                    if raw.get("max_batch") is not None else None),
+        num_shards=(int(raw["num_shards"])
+                    if raw.get("num_shards") is not None else None),
         **{k: (float(v) if v is not None else None)
            for k, v in opt.items()},
     )
 
 
 def load_file(path: str) -> RecordSet:
-    """Parse one BENCH_*.json (schema 1-4) into a RecordSet.
+    """Parse one BENCH_*.json (schema 1-5) into a RecordSet.
 
     Schema 4 payloads (``"kind": "serving"``) load as
     :class:`ServingRecord` rows; earlier schemas as
@@ -256,9 +338,9 @@ def load_file(path: str) -> RecordSet:
         schema, env, raw_records = 1, {}, payload
     elif isinstance(payload, dict):
         schema = int(payload.get("schema", 0))
-        if schema not in (2, 3, 4):
+        if schema not in (2, 3, 4, 5):
             raise ValueError(f"{path}: unsupported schema {schema!r} "
-                             f"(expected 1-list, 2, 3, or 4)")
+                             f"(expected 1-list, 2, 3, 4, or 5)")
         if schema == 4:
             kind = str(payload.get("kind", "serving"))
             if kind != "serving":
@@ -285,8 +367,8 @@ def load_file(path: str) -> RecordSet:
 
 def load_dir(runs_dir: str = "runs") -> Tuple[RecordSet, ...]:
     """Load every ``BENCH_*.json`` under *runs_dir*, sorted by
-    (kernel, kind) — a family's bench sweep sorts before its serving
-    sessions.
+    (kernel, kind, mesh) — a family's single-device bench sweep sorts
+    before its mesh sweeps, which sort before its serving sessions.
 
     This is the measurement half of the paper's measure-vs-theory loop;
     the returned sets feed ``repro.report.claims.check_records``.
@@ -295,5 +377,6 @@ def load_dir(runs_dir: str = "runs") -> Tuple[RecordSet, ...]:
     if not paths:
         raise FileNotFoundError(f"no BENCH_*.json files under {runs_dir!r}")
     sets = tuple(sorted((load_file(p) for p in paths),
-                        key=lambda s: (s.kernel, s.kind)))
+                        key=lambda s: (s.kernel, s.kind,
+                                       s.mesh_devices)))
     return sets

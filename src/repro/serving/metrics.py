@@ -127,6 +127,7 @@ def serving_record(summary: ServingSummary, *, kernel: str, engine: str,
                    memory_bound: bool, mxu_ceiling: float,
                    max_batch: Optional[int] = None,
                    max_wait_ms: Optional[float] = None,
+                   num_shards: int = 1,
                    results: Optional[Sequence[RequestResult]] = None,
                    ) -> Dict:
     """One schema-4 serving record: summary + analytic join fields.
@@ -136,11 +137,13 @@ def serving_record(summary: ServingSummary, *, kernel: str, engine: str,
     resolved to) come from the executor's memoized Advice, so the
     claims layer can re-derive §6 routing for the record exactly as it
     does for kernel sweeps.  The batching-policy knobs (``max_batch``,
-    ``max_wait_ms``) ride along so the compare gate can refuse to join
-    sessions formed under different policies.
+    ``max_wait_ms``) and the mesh width (``num_shards`` — batches were
+    charged shard-parallel compute) ride along so the compare gate can
+    refuse to join sessions formed under different policies.
     """
     del results  # per-request samples stay in-process; records are sums
     return {
+        "num_shards": int(num_shards),
         "max_batch": (int(max_batch) if max_batch is not None else None),
         "max_wait_ms": (round(float(max_wait_ms), 3)
                         if max_wait_ms is not None else None),

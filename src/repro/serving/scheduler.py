@@ -54,10 +54,19 @@ class BatchPolicy:
 
 @dataclasses.dataclass(frozen=True)
 class BatchExecution:
-    """What an executor reports back for one launched batch."""
+    """What an executor reports back for one launched batch.
+
+    ``compute_s`` is what the scheduler folds back into the virtual
+    clock.  A mesh-sharded executor reports the *shard-parallel* time
+    (its slowest shard): the N shards of one batch run side by side on
+    an N-device mesh, so that maximum — not the serial sum — is what
+    queueing compounds on.  ``shards`` records how many ways the batch
+    was split (1 = unsharded).
+    """
 
     engine: str        # 'vector' | 'matrix' — what actually ran
     compute_s: float   # measured (or simulated) batch compute seconds
+    shards: int = 1    # mesh shards the batch was split across
 
 
 @dataclasses.dataclass(frozen=True)

@@ -36,6 +36,7 @@ class SessionConfig:
     policy: BatchPolicy = dataclasses.field(default_factory=BatchPolicy)
     slo: SLO = DEFAULT_SLO
     trace_path: Optional[str] = None
+    num_shards: int = 1          # mesh shards per launch (1 = no mesh)
 
 
 def run_session(cfg: SessionConfig, executor=None,
@@ -54,7 +55,8 @@ def run_session(cfg: SessionConfig, executor=None,
     if executor is None:
         executor = KernelBatchExecutor(engine=cfg.engine,
                                        max_batch=cfg.policy.max_batch,
-                                       seed=cfg.seed)
+                                       seed=cfg.seed,
+                                       num_shards=cfg.num_shards)
     if source is None:
         source = make_loadgen(cfg.workload, cfg.kernel,
                               rate_rps=cfg.rate_rps, size=cfg.size,
@@ -80,5 +82,6 @@ def run_session(cfg: SessionConfig, executor=None,
         memory_bound=advice.memory_bound,
         mxu_ceiling=advice.max_speedup_matrix,
         max_batch=cfg.policy.max_batch,
-        max_wait_ms=cfg.policy.max_wait_s * 1e3)
+        max_wait_ms=cfg.policy.max_wait_s * 1e3,
+        num_shards=cfg.num_shards)
     return log, summary, record

@@ -1,0 +1,31 @@
+"""Mesh-sharded execution layer: split kernels, keep the paper's verdict.
+
+The paper's Eq. 23/24 ceiling on matrix-engine speedups for
+memory-bound kernels is a per-device statement; this package carries
+it across a device mesh.  :mod:`repro.sharding.plan` describes *how* a
+registered kernel call splits (data / rowblock-with-halo / head — one
+kind per §3 family shape) and accounts the traffic each shard moves;
+:mod:`repro.sharding.executor` runs the per-shard launches through the
+engine dispatcher under a ``make_auto_mesh`` data axis, so §6 routing
+and tuned tile configs apply shard by shard.  :mod:`repro.sharding.rules`
+and :mod:`repro.sharding.collective_matmul` are the LM-stack side of
+the same story: parameter/activation PartitionSpecs and
+latency-hiding (§4.1-style fully-overlapped) tensor-parallel matmuls.
+
+Consumers: ``repro.core.dispatch`` attaches a :class:`ShardSpec` to
+its memoized Advice when a mesh is configured; ``benchmarks.run sweep
+--mesh N`` produces schema-5 records whose shard claims
+``repro.report.claims`` verifies; ``repro.serving.batcher`` packs
+batches per shard and charges the virtual clock the shard-parallel
+maximum.  See docs/sharding.md for the end-to-end scaling story.
+"""
+from .executor import ShardRun, ShardedExecutor
+from .plan import (SHARD_KINDS, Shard, ShardPlan, ShardSpec,
+                   combine_outputs, first_array, plan_for, shard_call,
+                   spec_for, traffic)
+
+__all__ = [
+    "SHARD_KINDS", "Shard", "ShardPlan", "ShardRun", "ShardSpec",
+    "ShardedExecutor", "combine_outputs", "first_array",
+    "plan_for", "shard_call", "spec_for", "traffic",
+]

@@ -12,6 +12,10 @@ from typing import Any, Optional, Tuple
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+__all__ = ["MODEL", "batch_spec", "cache_pspecs", "fit_spec",
+           "fsdp_pspecs", "input_pspecs", "param_pspecs",
+           "to_shardings", "zero1_pspecs"]
+
 Pytree = Any
 
 MODEL = "model"
@@ -211,5 +215,7 @@ def cache_pspecs(cfg, mesh, caches_abstract: Pytree,
 
 
 def to_shardings(mesh, pspecs: Pytree) -> Pytree:
+    """Bind a PartitionSpec tree to *mesh* as NamedShardings (the form
+    ``jax.device_put``/``in_shardings`` consume)."""
     return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
                         is_leaf=lambda x: isinstance(x, P))

@@ -49,19 +49,42 @@ def test_time_fn_returns_median_iqr_iters():
     assert t.iters == 7
 
 
-def test_write_json_schema3(tmp_path):
+def test_write_json_schema5(tmp_path):
     recs = [{"kernel": "demo", "engine": "vector", "size": 8,
              "dtype": "float32", "ref_us_per_call": 1.0,
-             "tile_config": None}]
+             "tile_config": None, "mesh_shape": None,
+             "shard_spec": None}]
     env = bench_env(interpret=True, hw_model="TPU-v5e")
     path = write_json("demo", recs, out_dir=str(tmp_path), env=env)
     payload = json.loads(open(path).read())
-    assert payload["schema"] == SCHEMA_VERSION == 3
+    assert payload["schema"] == SCHEMA_VERSION == 5
     assert payload["kernel"] == "demo"
     assert payload["records"] == recs
     for key in ("jax", "numpy", "device", "interpret", "hw_model"):
         assert key in payload["env"]
     assert payload["env"]["hw_model"] == "TPU-v5e"
+
+
+def test_write_json_mesh_files_do_not_clobber_baseline(tmp_path):
+    recs = [{"kernel": "demo", "engine": "vector", "size": 8,
+             "dtype": "float32", "ref_us_per_call": 1.0}]
+    base = write_json("demo", recs, out_dir=str(tmp_path))
+    mesh = write_json("demo", recs, out_dir=str(tmp_path), mesh=2)
+    assert base.endswith("BENCH_demo.json")
+    assert mesh.endswith("BENCH_demo_mesh2.json")
+    assert base != mesh
+
+
+def test_write_serving_json_mesh_files_do_not_clobber_baseline(tmp_path):
+    from benchmarks.common import write_serving_json
+
+    recs = [{"kernel": "demo", "engine": "vector"}]
+    base = write_serving_json("demo", recs, out_dir=str(tmp_path))
+    mesh = write_serving_json("demo", recs, out_dir=str(tmp_path),
+                              mesh=2)
+    assert base.endswith("BENCH_serve_demo.json")
+    assert mesh.endswith("BENCH_serve_demo_mesh2.json")
+    assert base != mesh
 
 
 # -- compare gate summary table ---------------------------------------------

@@ -46,7 +46,7 @@ def test_workflow_is_structurally_valid(name):
 def test_ci_matrix_split():
     wf = _load("ci.yml")
     jobs = wf["jobs"]
-    assert set(jobs) == {"lint-unit", "slow"}
+    assert set(jobs) == {"lint-unit", "mesh-smoke", "slow"}
 
     lint = jobs["lint-unit"]
     matrix = lint["strategy"]["matrix"]["python-version"]
@@ -92,6 +92,39 @@ def test_ci_serve_smoke_gate():
     assert "--kernels scale,axpy" in runs
     assert "benchmarks.compare runs runs-ci-serve" in runs
     assert "--kind serving" in runs
+
+
+def test_ci_docs_link_check_step():
+    """docs/ integrity is a named PR-CI step (dead links go red)."""
+    runs = _run_text(_load("ci.yml")["jobs"]["lint-unit"])
+    assert "pytest -q tests/test_docs.py" in runs
+
+
+def test_ci_mesh_smoke_job():
+    """The 2-way-mesh smoke: scale (data) + stencil (rowblock + halo)
+    swept under --mesh 2 and gated with the bench compare gate against
+    the committed mesh baseline, without touching other mesh widths."""
+    job = _load("ci.yml")["jobs"]["mesh-smoke"]
+    runs = _run_text(job)
+    assert "benchmarks.run scale stencil --mesh 2" in runs
+    assert "--tuned tuned.json" in runs
+    assert "benchmarks.compare runs runs-ci-mesh" in runs
+    assert "--kind bench" in runs and "--mesh 2" in runs
+    uploads = [s for s in job["steps"]
+               if "upload-artifact" in s.get("uses", "")]
+    assert uploads and "runs-ci-mesh" in uploads[0]["with"]["path"]
+    # the fast gate stays scoped to the single-device sweep so the two
+    # jobs never double-gate (or double-miss) a mesh width
+    lint_runs = _run_text(_load("ci.yml")["jobs"]["lint-unit"])
+    assert "--kind bench --mesh 1" in lint_runs
+
+
+def test_nightly_covers_committed_mesh_widths():
+    """The nightly bench gate runs with the default --mesh all, so its
+    candidate sweep must reproduce every committed mesh width."""
+    runs = _run_text(_load("nightly.yml")["jobs"]["sweep-and-tune"])
+    assert "benchmarks.run scale stencil --mesh 2" in runs
+    assert "benchmarks.run scale --mesh 4" in runs
 
 
 def test_nightly_schedule_and_artifacts():

@@ -1,10 +1,10 @@
 """Public-API documentation gate for the paper-facing modules.
 
-Every public symbol of ``repro.core.dispatch``, ``repro.kernels.registry``
-and ``repro.report`` must carry a docstring, and the curated
-paper-facing callables must cite the paper section or equation they
-implement ("§n" or "Eq. n") so the code stays navigable against
-PAPER.md."""
+Every public symbol of ``repro.core.dispatch``, ``repro.kernels.registry``,
+``repro.report``, and the full ``repro.serving`` / ``repro.sharding``
+surfaces must carry a docstring, and the curated paper-facing callables
+must cite the paper section or equation they implement ("§n" or
+"Eq. n") so the code stays navigable against PAPER.md."""
 import importlib
 import inspect
 
@@ -19,10 +19,19 @@ MODULES = (
     "repro.report.render",
     "repro.serving",
     "repro.serving.loadgen",
+    "repro.serving.requests",
     "repro.serving.scheduler",
     "repro.serving.batcher",
+    "repro.serving.lm",
     "repro.serving.metrics",
+    "repro.serving.session",
     "repro.serving.slo",
+    "repro.sharding",
+    "repro.sharding.plan",
+    "repro.sharding.executor",
+    "repro.sharding.rules",
+    "repro.sharding.collective_matmul",
+    "repro.launch.mesh",
 )
 
 # (module, qualname) pairs whose docstrings must cite the paper.
@@ -47,6 +56,13 @@ PAPER_CITED = (
     ("repro.serving.scheduler", "ContinuousBatchingScheduler"),
     ("repro.serving.batcher", "KernelBatchExecutor"),
     ("repro.serving.metrics", "serving_record"),
+    ("repro.serving.session", "run_session"),
+    ("repro.sharding.plan", "ShardSpec"),
+    ("repro.sharding.plan", "ShardPlan"),
+    ("repro.sharding.plan", "plan_for"),
+    ("repro.sharding.plan", "spec_for"),
+    ("repro.sharding.plan", "traffic"),
+    ("repro.sharding.executor", "ShardedExecutor"),
 )
 
 

@@ -45,18 +45,19 @@ def _write_set(path, records, schema=2, kernel="scale"):
 
 # -- ingestion --------------------------------------------------------------
 
-def test_load_committed_runs_schema3():
+def test_load_committed_runs_schema5():
     sets = load_dir(str(RUNS))
-    keys = [(s.kernel, s.kind) for s in sets]
+    keys = [(s.kernel, s.kind, s.mesh_devices) for s in sets]
     assert keys == sorted(keys)
     assert {s.kernel for s in sets} >= {"attention", "axpy", "scale",
                                         "spmv", "stencil", "triad"}
     tuned_points = 0
+    mesh_points = 0
     for s in sets:
         if s.kind == "serving":
             assert s.schema == 4  # serving sessions live in schema 4
             continue
-        assert s.schema == 3
+        assert s.schema == 5
         assert "jax" in s.env and "device" in s.env
         assert s.env["interpret"] is True
         for rec in s.records:
@@ -64,9 +65,20 @@ def test_load_committed_runs_schema3():
             if rec.tile_config is not None:
                 assert rec.tile_params  # params map present + non-empty
                 tuned_points += 1
+            # mesh sweeps carry a shard spec on every record; the
+            # single-device baseline carries none
+            if s.mesh_devices > 1:
+                assert rec.shard_spec is not None
+                assert rec.num_shards > 1
+                mesh_points += 1
+            else:
+                assert rec.shard_spec is None and rec.num_shards == 1
     # the committed baseline was swept with tuned tiles: every family
-    # with a tile space contributes tuned sweep points
+    # with a tile space contributes tuned sweep points — and the mesh
+    # baseline (scale 2/4-way, stencil 2-way) is present for the CI
+    # mesh-smoke gate to join against
     assert tuned_points > 0
+    assert mesh_points > 0
 
 
 def test_load_schema3_tile_config(tmp_path):
@@ -94,7 +106,8 @@ def test_load_schema1_legacy_list(tmp_path):
     _write_set(p, [_raw()], schema=1)
     rs = load_file(str(p))
     assert rs.schema == 1 and rs.env == {} and len(rs.records) == 1
-    assert rs.records[0].point == ("scale", "vector", 1024, "float32")
+    # legacy records join as unsharded points (trailing shard count 1)
+    assert rs.records[0].point == ("scale", "vector", 1024, "float32", 1)
 
 
 def test_load_rejects_missing_fields_and_bad_schema(tmp_path):
@@ -247,6 +260,116 @@ def test_report_flags_violations(tmp_path):
 
 
 # -- compare gate -----------------------------------------------------------
+
+def _shard_spec(**overrides):
+    """A healthy 2-way data-split shard_spec for _raw()'s sweep point."""
+    spec = {"kind": "data", "num_shards": 2, "axis": "data", "halo": 0,
+            "total_bytes": 8192.0, "agg_bytes": 8192.0,
+            "shard_bytes": 4096.0, "shard_intensity": 0.125,
+            "pred_shard_us_v5e": 0.5}
+    spec.update(overrides)
+    return spec
+
+
+def _write_schema5(path, records, kernel="scale", mesh=2):
+    payload = {"schema": 5, "kernel": kernel,
+               "env": {"jax": "0", "device": "cpu", "interpret": True,
+                       "hw_model": "TPU-v5e", "mesh_shape": [mesh]},
+               "records": records}
+    path.write_text(json.dumps(payload))
+
+
+def test_schema5_shard_spec_round_trip(tmp_path):
+    p = tmp_path / "BENCH_scale_mesh2.json"
+    _write_schema5(p, [_raw(mesh_shape=[2], shard_spec=_shard_spec())])
+    rs = load_file(str(p))
+    assert rs.schema == 5 and rs.mesh_devices == 2
+    rec = rs.records[0]
+    assert rec.mesh_shape == (2,) and rec.num_shards == 2
+    assert rec.point[-1] == 2  # shards are part of the join key
+    assert not violations(check_records([rs]))
+
+
+@pytest.mark.parametrize("spec_overrides,expect", [
+    # per-shard intensity above the unsharded one: impossible split
+    ({"shard_intensity": 0.5}, "shard_ceiling"),
+    # more shards than the recorded mesh provides
+    ({"num_shards": 8}, "shard_ceiling"),
+    ({"kind": "diagonal"}, "shard_ceiling"),
+    # aggregate below the unsharded total: invented traffic savings
+    ({"agg_bytes": 4096.0}, "shard_traffic"),
+    # halo-free data split must move exactly the unsharded bytes
+    ({"agg_bytes": 9000.0}, "shard_traffic"),
+    # max-shard bytes times N cannot cover the aggregate
+    ({"shard_bytes": 1000.0}, "shard_traffic"),
+    # a rowblock split escapes the exactness arm but not the cap: no
+    # shard may move more bytes than the unsharded kernel, so a
+    # hand-edited 100x aggregate-traffic story still fails
+    ({"kind": "rowblock", "agg_bytes": 819200.0,
+      "shard_bytes": 409600.0}, "shard_traffic"),
+])
+def test_shard_claim_violations_detected(tmp_path, spec_overrides,
+                                         expect):
+    p = tmp_path / "BENCH_scale_mesh2.json"
+    _write_schema5(p, [_raw(mesh_shape=[2],
+                            shard_spec=_shard_spec(**spec_overrides))])
+    bad = violations(check_records([load_file(str(p))]))
+    assert expect in {v.claim for v in bad}, (
+        f"{spec_overrides} should violate {expect}")
+
+
+def test_report_renders_sharded_section(tmp_path):
+    runs = tmp_path / "runs"
+    runs.mkdir()
+    _write_set(runs / "BENCH_scale.json", [_raw()])
+    _write_schema5(runs / "BENCH_scale_mesh2.json",
+                   [_raw(mesh_shape=[2], shard_spec=_shard_spec())])
+    report = render_report(load_dir(str(runs)))
+    assert "## Sharded execution" in report
+    assert "zero shard-claim violations" in report
+    assert "scale-mesh2.md" in report
+    # the single-device claim table does not double-count mesh sets
+    assert report.count("| scale | 1 |") == 1
+
+
+def test_clamped_mesh_sweep_keeps_its_requested_width(tmp_path):
+    """A 4-way mesh over a 2-extent split plans 2 shards but must
+    still key (and filter) as a mesh-4 point — not collide with a
+    genuine 2-way sweep or vanish under ``--mesh 4``."""
+    from benchmarks.compare import compare
+
+    base = tmp_path / "base"
+    base.mkdir()
+    clamped = _raw(mesh_shape=[4],
+                   shard_spec=_shard_spec(num_shards=2))
+    _write_schema5(base / "BENCH_scale_mesh4.json", [clamped], mesh=4)
+    rs = load_file(str(base / "BENCH_scale_mesh4.json"))
+    rec = rs.records[0]
+    assert rec.num_shards == 2 and rec.mesh_devices == 4
+    assert rec.point[-1] == 4
+    # self-comparison scoped to the requested width joins, not empties
+    assert compare(str(base), str(base), mesh=4) == []
+
+
+def test_compare_gate_mesh_filter(tmp_path):
+    from benchmarks.compare import compare
+
+    base, cand = tmp_path / "base", tmp_path / "cand"
+    base.mkdir(), cand.mkdir()
+    _write_set(base / "BENCH_scale.json", [_raw()])
+    _write_schema5(base / "BENCH_scale_mesh2.json",
+                   [_raw(mesh_shape=[2], shard_spec=_shard_spec())])
+    # candidate reproduces only the single-device sweep
+    _write_set(cand / "BENCH_scale.json", [_raw()])
+    # default (--mesh all): the lost 2-way width is missing coverage
+    msgs = "\n".join(compare(str(base), str(cand)))
+    assert "missing" in msgs
+    # scoped to the width the candidate actually ran: clean pass
+    assert compare(str(base), str(cand), mesh=1) == []
+    # and scoping to a width nobody ran fails loudly, not vacuously
+    msgs = "\n".join(compare(str(base), str(cand), mesh=4))
+    assert "empty comparison" in msgs
+
 
 def test_compare_gate(tmp_path):
     from benchmarks.compare import compare

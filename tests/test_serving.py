@@ -258,7 +258,9 @@ def test_schema4_round_trip(tmp_path):
     assert rs.kernel == "scale" and len(rs.records) == 2
     rec = rs.records[0]
     assert isinstance(rec, ServingRecord)
-    assert rec.point == ("scale", "vector", "poisson", 65536, "float32")
+    # legacy records (no num_shards) key as unsharded sessions
+    assert rec.point == ("scale", "vector", "poisson", 65536,
+                         "float32", 1)
     assert rec.p99_ms == 25.0 and rec.memory_bound is True
     # the round-tripped record passes every serving claim
     results = check_serving_record(rec)
