@@ -20,6 +20,17 @@ aggregate vs. unsharded bytes, worst per-shard intensity), which the
 claims layer verifies against the paper's per-device ceiling
 (Eq. 23/24 survives aggregation: per-shard bandwidth still sets the
 roof).
+
+``--mesh N --real`` additionally runs every sweep point through
+``repro.sharding.executor.MeshExecutor`` — one ``shard_map`` step over
+N actual XLA host devices — and attaches a schema-6 ``mesh_exec``
+block per record: *measured* mesh wall time, the halo exchange's own
+measured collective time (the ``ppermute`` ring probe; 0 when the
+plan wires no bytes), the virtual-clock analogue restated on the same
+XLA-native math, and the real-vs-virtual skew the compare gate
+tracks.  The virtual executor still supplies the per-engine
+correctness column; the mesh numbers are execution evidence, shared
+across a point's engine records like ``ref_us_per_call``.
 """
 from __future__ import annotations
 
@@ -30,6 +41,7 @@ import numpy as np
 from repro.core.dispatch import DEFAULT_DISPATCHER
 from repro.kernels import registry
 from repro.sharding import ShardedExecutor, traffic
+from repro.sharding.executor import MeshExecutor
 
 from .common import bench_env, emit, time_fn, write_json
 
@@ -68,6 +80,7 @@ def _shard_spec_field(op, plan, args, kw, hw) -> dict:
         **plan.spec.to_json(),
         "total_bytes": t["total_bytes"],
         "agg_bytes": t["agg_bytes"],
+        "wire_bytes": t["wire_bytes"],
         "shard_bytes": t["shard_bytes"],
         "shard_intensity": t["shard_intensity"],
         "pred_shard_us_v5e": round(
@@ -75,16 +88,19 @@ def _shard_spec_field(op, plan, args, kw, hw) -> dict:
     }
 
 
-def records_for(op, mesh: int = 1) -> List[dict]:
+def records_for(op, mesh: int = 1, real: bool = False) -> List[dict]:
     """One record per (engine, size, dtype) for a registered kernel.
 
     With ``mesh > 1`` each engine variant runs through the sharded
     executor instead of a single launch; ``max_err`` then certifies
-    the *sharded* result against the oracle.
+    the *sharded* result against the oracle.  With ``real`` the point
+    additionally executes on a real N-device mesh and every record
+    carries the measured ``mesh_exec`` evidence.
     """
     rng = np.random.default_rng(0)
     hw = DEFAULT_DISPATCHER.hw
     sharded = ShardedExecutor(mesh) if mesh > 1 else None
+    mesh_exec = MeshExecutor(mesh) if (real and mesh > 1) else None
     recs = []
     for size in op.bench_sizes:
         for dtype in op.dtypes:
@@ -101,6 +117,19 @@ def records_for(op, mesh: int = 1) -> List[dict]:
             # per-shard traits once per (size, dtype), not per engine
             shard_field = (_shard_spec_field(op, plan, args, kw, hw)
                            if plan is not None else None)
+            mesh_field = None
+            if mesh_exec is not None:
+                # one real shard_map execution per point, shared by the
+                # engine records (mesh bodies are XLA-native reference
+                # math, engine-independent — same policy as
+                # ref_us_per_call); mesh_max_err certifies the real
+                # halo exchange / head split against the oracle
+                mrun = mesh_exec.run(op, *args, plan=plan, **kw)
+                mesh_err = float(np.max(np.abs(
+                    np.asarray(mrun.out, np.float32) - want)))
+                mesh_field = mesh_exec.measure(op, *args, plan=plan,
+                                               **kw)
+                mesh_field["mesh_max_err"] = mesh_err
             for engine in sorted(op.engines):
                 # runs with the tuned tile config when one is cached --
                 # the correctness check covers the tiles we'd deploy
@@ -131,6 +160,7 @@ def records_for(op, mesh: int = 1) -> List[dict]:
                     "tile_config": _tile_config_field(op, engine, dtype),
                     "mesh_shape": [mesh] if mesh > 1 else None,
                     "shard_spec": shard_field,
+                    "mesh_exec": mesh_field,
                 })
     return recs
 
@@ -138,7 +168,8 @@ def records_for(op, mesh: int = 1) -> List[dict]:
 def rows(names: Optional[Iterable[str]] = None,
          json_dir: Optional[str] = "runs",
          tuned: Optional[str] = None,
-         mesh: int = 1) -> List[dict]:
+         mesh: int = 1,
+         real: bool = False) -> List[dict]:
     if tuned is not None:
         # sweep with tuned tile configs: dispatch consults the cache
         # for every launch and each record says which tiles it used
@@ -148,24 +179,34 @@ def rows(names: Optional[Iterable[str]] = None,
     # sweep's mesh width (restored after: rows() must not leak mesh
     # state into later in-process callers)
     prior_mesh = DEFAULT_DISPATCHER.mesh_shards
-    DEFAULT_DISPATCHER.set_mesh(mesh)
+    prior_mode = DEFAULT_DISPATCHER.mesh_mode
+    DEFAULT_DISPATCHER.set_mesh(mesh, "mesh" if real else "virtual")
     try:
         wanted = set(names) if names is not None else None
+        overlap = None
+        if real and mesh > 1:
+            # once per sweep: §4.1's lesson measured on the live mesh
+            # (ring weight-gather vs serialized all_gather matmul),
+            # recorded in every file's env block
+            overlap = MeshExecutor(mesh).overlap_probe()
         out = []
         for op in registry.all_ops():
             if wanted is not None and op.name not in wanted:
                 continue
-            recs = records_for(op, mesh=mesh)
+            recs = records_for(op, mesh=mesh, real=real)
             if json_dir:
                 env = bench_env(interpret=True,
                                 hw_model=DEFAULT_DISPATCHER.hw.name)
                 if mesh > 1:
                     env["mesh_shape"] = [mesh]
+                    env["mesh_exec_mode"] = "mesh" if real else "virtual"
+                if overlap is not None:
+                    env["collective_overlap"] = overlap
                 write_json(op.name, recs, json_dir, env=env, mesh=mesh)
             out.extend(_csv_rows(recs, mesh))
         return out
     finally:
-        DEFAULT_DISPATCHER.set_mesh(prior_mesh)
+        DEFAULT_DISPATCHER.set_mesh(prior_mesh, prior_mode)
 
 
 def _csv_rows(recs: List[dict], mesh: int) -> List[dict]:
@@ -179,6 +220,11 @@ def _csv_rows(recs: List[dict], mesh: int) -> List[dict]:
         shard = "" if not spec else (
             f";shards={spec['num_shards']};halo={spec['halo']};"
             f"agg/total={spec['agg_bytes'] / spec['total_bytes']:.3f}")
+        mex = r.get("mesh_exec")
+        if mex:
+            shard += (f";mesh_wall_us={mex['mesh_wall_us']};"
+                      f"coll_us={mex['collective_us']};"
+                      f"skew={mex['skew']}")
         name = f"{r['kernel']}/{r['engine']}/n={r['size']}/{r['dtype']}"
         if mesh > 1:
             name += f"/mesh={mesh}"

@@ -34,8 +34,13 @@ __all__ = ["SCHEMA_VERSION", "SERVING_SCHEMA_VERSION", "Timing",
 #: adds the mesh fields — per-record ``mesh_shape`` (the requested
 #: mesh, e.g. ``[2]``) and ``shard_spec`` (the ShardPlan the point ran
 #: under plus its traffic accounting), both null for single-device
-#: sweep points.
-SCHEMA_VERSION = 5
+#: sweep points; schema 6 adds the per-record ``mesh_exec`` field — the
+#: *measured* real-mesh execution evidence from a ``--real`` sweep
+#: (``repro.sharding.executor.MeshExecutor``: shard_map wall time over
+#: N actual XLA devices, the ppermute halo exchange's own collective
+#: time, the virtual-clock analogue, their skew, and the real-mesh
+#: max_err), null for single-device and virtual-mesh sweep points.
+SCHEMA_VERSION = 6
 
 #: Version of the serving record file format (``BENCH_serve_*.json``):
 #: schema 4 marks a ``"kind": "serving"`` set whose records are

@@ -11,6 +11,9 @@ when
 
 * a candidate sweep point's ``ref_us_per_call`` regresses by more than
   ``--threshold`` (fraction; default 0.25 = 25%),
+* a joined pair of *measured real-mesh* points (both sides carrying
+  schema-6 ``mesh_exec``) regresses its measured ``mesh_wall_us`` or
+  its real-vs-virtual ``skew`` by more than the same threshold,
 * a candidate **serving** session's tail latency (``p99_ms``) regresses
   or its ``goodput_rps`` drops by more than ``--threshold``,
 * any candidate record violates a paper claim (Eq. 23/24 ceiling,
@@ -205,6 +208,23 @@ def gate(baseline_dir: str, candidate_dir: str, threshold: float = 0.25,
             _gate_metric(key, base[key].ref_us_per_call,
                          cand[key].ref_us_per_call, "ref_us_per_call",
                          "us", threshold, "perf", failures)
+            b_mex = base[key].mesh_exec
+            c_mex = cand[key].mesh_exec
+            if b_mex and c_mex:
+                # both sides measured the real mesh: gate the measured
+                # wall time and the real-vs-virtual skew like any other
+                # perf metric (a baseline-only mesh_exec is reported as
+                # schema drift by the claims side, not here — a
+                # candidate swept without --real must not be blamed
+                # for timings it never took)
+                _gate_metric(key, float(b_mex["mesh_wall_us"]),
+                             float(c_mex["mesh_wall_us"]),
+                             "mesh_wall_us", "us", threshold, "perf",
+                             failures)
+                _gate_metric(key, float(b_mex.get("skew", 0.0)),
+                             float(c_mex.get("skew", 0.0)),
+                             "mesh_skew", "x", threshold, "perf",
+                             failures)
 
     if kind in ("all", "serving"):
         base = _index(base_sets, "serving", wanted)
@@ -226,7 +246,8 @@ def gate(baseline_dir: str, candidate_dir: str, threshold: float = 0.25,
             mismatched = [
                 f"{f}={_knob(base[key], f)} vs {_knob(cand[key], f)}"
                 for f in ("rate_rps", "duration_s", "slo_ms", "seed",
-                          "max_batch", "max_wait_ms", "num_shards")
+                          "max_batch", "max_wait_ms", "num_shards",
+                          "mesh_exec_mode")
                 if _knob(base[key], f) != _knob(cand[key], f)]
             if mismatched:
                 failures.append(Failure(

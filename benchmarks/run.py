@@ -33,10 +33,19 @@ record-side name.
 
 ``--mesh N`` sweeps under an N-way data-axis mesh (``repro.sharding``):
 engine variants execute shard by shard (halo exchange included), and
-each schema-5 record carries ``mesh_shape`` + ``shard_spec`` with the
+each schema-6 record carries ``mesh_shape`` + ``shard_spec`` with the
 plan's traffic accounting for the shard claims in ``repro.report``.
 Mesh records land in ``BENCH_<kernel>_mesh<N>.json`` beside the
 single-device baseline.
+
+``--mesh N --real`` forces the host platform to expose N actual XLA
+devices (``repro.launch.mesh.host_device_count``, which must win the
+race with JAX backend creation — hence it runs first thing in
+``main``) and executes every sweep point through shard_map on the
+real mesh too, attaching measured ``mesh_exec`` evidence (wall /
+collective / virtual-analogue µs + skew) to each record and a
+``collective_overlap`` probe (§4.1's overlapped-vs-serialized ring
+matmul, measured) to the file's env block.
 """
 from __future__ import annotations
 
@@ -93,12 +102,22 @@ def main(argv: Optional[List[str]] = None) -> None:
         out_dir = taken
     tuned = _take_flag(argv, "--tuned", "a tuned.json path argument")
     mesh_arg = _take_flag(argv, "--mesh", "a shard-count argument")
+    real = "--real" in argv
+    if real:
+        argv.remove("--real")
     try:
         mesh = 1 if mesh_arg is None else int(mesh_arg)
     except ValueError:
         raise SystemExit(f"--mesh requires an integer, got {mesh_arg!r}")
     if mesh < 1:
         raise SystemExit(f"--mesh must be >= 1, got {mesh}")
+    if real:
+        if mesh < 2:
+            raise SystemExit("--real requires --mesh N with N >= 2")
+        # must precede the first JAX computation: XLA only honors
+        # --xla_force_host_platform_device_count at backend creation
+        from repro.launch.mesh import host_device_count
+        host_device_count(mesh)
     if argv and argv[0] == "report":
         if tuned is not None:
             # the report is a pure function of runs/; a tuned cache
@@ -106,6 +125,8 @@ def main(argv: Optional[List[str]] = None) -> None:
             raise SystemExit("--tuned only applies to kernel sweeps")
         if mesh_arg is not None:
             raise SystemExit("--mesh only applies to kernel sweeps")
+        if real:
+            raise SystemExit("--real only applies to kernel sweeps")
         # `report runs-ci` and `report --out runs-ci` both read runs-ci
         if out_given and len(argv) > 1:
             raise SystemExit("report: pass the records dir positionally "
@@ -122,16 +143,18 @@ def main(argv: Optional[List[str]] = None) -> None:
         raise SystemExit("--tuned only applies to kernel sweeps")
     if mesh_arg is not None and not sweeps:
         raise SystemExit("--mesh only applies to kernel sweeps")
+    if real and not sweeps:
+        raise SystemExit("--real only applies to kernel sweeps")
     print("name,us_per_call,derived")
     for key in which:
         if key in THEORY:
             emit(THEORY[key].rows())
         elif key in ("kernels", "sweep"):
             emit(bench_kernels.rows(json_dir=out_dir, tuned=tuned,
-                                    mesh=mesh))
+                                    mesh=mesh, real=real))
         elif key in kernel_names:
             emit(bench_kernels.rows([key], json_dir=out_dir, tuned=tuned,
-                                    mesh=mesh))
+                                    mesh=mesh, real=real))
         else:
             raise SystemExit(
                 f"unknown benchmark {key!r}; have "

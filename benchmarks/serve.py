@@ -58,6 +58,11 @@ def _parse(argv: Optional[List[str]]) -> argparse.Namespace:
                    help="data-axis mesh width: every launch splits into "
                         "this many shards and batches are charged the "
                         "shard-parallel compute time (default 1)")
+    p.add_argument("--real", action="store_true",
+                   help="execute sharded batches on a real N-device "
+                        "host mesh (shard_map + measured wall time) "
+                        "instead of the virtual max-over-shards clock; "
+                        "requires --mesh N >= 2")
     p.add_argument("--max-batch", type=int, default=8,
                    help="continuous-batching size trigger (default 8)")
     p.add_argument("--max-wait-ms", type=float, default=20.0,
@@ -77,6 +82,13 @@ def main(argv: Optional[List[str]] = None) -> int:
     args = _parse(argv)
     if args.workload == "trace" and not args.trace:
         raise SystemExit("--workload trace requires --trace PATH")
+    if args.real:
+        if args.mesh < 2:
+            raise SystemExit("--real requires --mesh N with N >= 2")
+        # must win the race with JAX backend creation (XLA reads
+        # --xla_force_host_platform_device_count exactly once)
+        from repro.launch.mesh import host_device_count
+        host_device_count(args.mesh)
     if args.tuned:
         DEFAULT_DISPATCHER.load_tuned(args.tuned)
     explicit = args.kernels is not None and args.kernels != "all"
@@ -113,6 +125,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     env = bench_env(interpret=True, hw_model=DEFAULT_DISPATCHER.hw.name)
     if args.mesh > 1:
         env["mesh_shape"] = [args.mesh]
+        env["mesh_exec_mode"] = "mesh" if args.real else "virtual"
     print("kernel,engine,workload,completed,p50_ms,p99_ms,goodput_rps,"
           "slo_attainment")
     for kernel in names:
@@ -127,7 +140,7 @@ def main(argv: Optional[List[str]] = None) -> int:
                 rate_rps=args.rate, duration_s=args.duration,
                 size=args.size, dtype=args.dtype, seed=args.seed,
                 policy=policy, slo=slo, trace_path=args.trace,
-                num_shards=args.mesh)
+                num_shards=args.mesh, real_mesh=args.real)
             _, summary, record = run_session(cfg, source=source)
             records.append(record)
             print(f"{kernel},{record['engine']},{args.workload},"

@@ -43,6 +43,14 @@ class Advice:
     # (Eq. 2) and therefore this engine decision unchanged — per-shard
     # bandwidth still sets the roof.
     shard_spec: Optional[Any] = None
+    # how a sharded call executes: "virtual" = serial per-shard launches
+    # on one device with max(shard times) modeling the N-way clock
+    # (repro.sharding.executor.ShardedExecutor), "mesh" = one shard_map
+    # step over N real XLA devices with measured wall time and live
+    # ppermute halo exchange (MeshExecutor).  Attached by
+    # Dispatcher.advise from its mesh mode; meaningless (stays
+    # "virtual") when shard_spec is None.
+    exec_mode: str = "virtual"
 
     def __str__(self) -> str:  # pragma: no cover - cosmetic
         return (f"[{self.kernel}] I={self.intensity:.4g} -> {self.engine} "

@@ -169,6 +169,16 @@ class TuningPolicy:
         return cache.lookup(kernel, engine, dtype, hw_model)
 
 
+_MESH_MODES = ("virtual", "mesh")
+
+
+def _check_mesh_mode(mode: str) -> str:
+    if mode not in _MESH_MODES:
+        raise ValueError(
+            f"mesh mode must be one of {_MESH_MODES}, got {mode!r}")
+    return mode
+
+
 class Dispatcher:
     """Advisor-backed engine router with a memoized Advice cache.
 
@@ -180,10 +190,11 @@ class Dispatcher:
 
     def __init__(self, advisor: Optional[EngineAdvisor] = None,
                  tuning: Optional[TuningPolicy] = None,
-                 mesh_shards: int = 1):
+                 mesh_shards: int = 1, mesh_mode: str = "virtual"):
         self.advisor = advisor if advisor is not None else DEFAULT_ADVISOR
         self.tuning = tuning if tuning is not None else TuningPolicy()
         self._mesh_shards = max(1, int(mesh_shards))
+        self._mesh_mode = _check_mesh_mode(mesh_mode)
         self._cache: Dict[Hashable, Advice] = {}
         self._hits = 0
         self._misses = 0
@@ -198,22 +209,34 @@ class Dispatcher:
         """How many mesh shards Advice is planned for (1 = no mesh)."""
         return self._mesh_shards
 
-    def set_mesh(self, num_shards: int) -> None:
-        """Configure the mesh width Advice plans shard splits for.
+    @property
+    def mesh_mode(self) -> str:
+        """How sharded calls execute: "virtual" clock or real "mesh"."""
+        return self._mesh_mode
+
+    def set_mesh(self, num_shards: int, mode: str = "virtual") -> None:
+        """Configure the mesh width (and execution mode) Advice plans for.
 
         With ``num_shards > 1`` every memoized Advice carries the
         ``ShardSpec`` the sharding layer (``repro.sharding.plan``)
         derives for its call — the paper's §6 decision is then a
         per-shard statement, which Eq. 2's intensity invariance under
         data-parallel splitting keeps identical to the per-device one.
-        The Advice cache embeds shard specs, so changing the mesh
-        drops it.
+        ``mode`` stamps how those shards execute: ``"virtual"`` (serial
+        launches, modeled N-way clock — PR 5's ShardedExecutor) or
+        ``"mesh"`` (one ``shard_map`` step over real devices with
+        measured wall time — MeshExecutor).  The mode does not change
+        the split or the engine decision, only which executor the
+        callers build and how records label their timings.  The Advice
+        cache embeds both, so changing either drops it.
         """
         num_shards = int(num_shards)
         if num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
-        if num_shards != self._mesh_shards:
+        mode = _check_mesh_mode(mode)
+        if num_shards != self._mesh_shards or mode != self._mesh_mode:
             self._mesh_shards = num_shards
+            self._mesh_mode = mode
             self.cache_clear()
 
     # -- advice ------------------------------------------------------------
@@ -259,7 +282,8 @@ class Dispatcher:
                 advice = dataclasses.replace(
                     advice,
                     shard_spec=spec_for(op, self._mesh_shards,
-                                        *args, **kwargs))
+                                        *args, **kwargs),
+                    exec_mode=self._mesh_mode)
             return advice
 
         return self._memoized(key, make)

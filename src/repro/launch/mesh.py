@@ -17,7 +17,62 @@ the devices this process actually has, so an off-hardware container
 """
 from __future__ import annotations
 
+import os
+
 import jax
+
+_HOST_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+def _jax_backend_initialized() -> bool:
+    """Whether this process already created an XLA backend/client.
+
+    Version-tolerant: inspects ``jax._src.xla_bridge``'s backend table
+    when present (jax 0.4/0.5), and conservatively reports ``False``
+    when the internals have moved — callers then proceed and XLA
+    itself decides whether the flag still applies.
+    """
+    try:
+        from jax._src import xla_bridge
+    except Exception:  # pragma: no cover - internals moved
+        return False
+    backends = getattr(xla_bridge, "_backends", None)
+    return bool(backends)
+
+
+def host_device_count(n: int) -> int:
+    """Force the host platform to expose *n* XLA devices (pre-init only).
+
+    The one entry point ``benchmarks.run sweep --mesh N --real``, the
+    serving driver, and the multi-device tests share: sets
+    ``--xla_force_host_platform_device_count=n`` into ``XLA_FLAGS``
+    (replacing any stale value) so the CPU client created at first
+    backend use exposes *n* devices.  XLA only reads the flag at
+    client creation, so calling this after JAX initialized cannot take
+    effect: if the backend is already up with fewer than *n* devices
+    this raises ``RuntimeError`` with the fix (set the flag — or call
+    this — before the first ``jax.devices()``/computation), and if it
+    is already up with *enough* devices it is a no-op.  Returns the
+    device count the process will see.
+    """
+    n = int(n)
+    if n < 1:
+        raise ValueError(f"host_device_count needs n >= 1, got {n}")
+    if _jax_backend_initialized():
+        have = len(jax.devices())
+        if have >= n:
+            return have
+        raise RuntimeError(
+            f"JAX already initialized with {have} device(s); cannot "
+            f"force {n} host devices now. Call host_device_count({n}) "
+            f"(or export XLA_FLAGS={_HOST_COUNT_FLAG}={n}) before the "
+            f"first jax.devices()/computation — e.g. run the sweep via "
+            f"'python -m benchmarks.run sweep --mesh {n} --real', which "
+            f"sets it before touching JAX.")
+    kept = [t for t in os.environ.get("XLA_FLAGS", "").split()
+            if not t.startswith(_HOST_COUNT_FLAG)]
+    os.environ["XLA_FLAGS"] = " ".join(kept + [f"{_HOST_COUNT_FLAG}={n}"])
+    return n
 
 
 def make_auto_mesh(shape, axes):

@@ -45,6 +45,31 @@ per-device verdict onto every shard of a mesh execution:
   whole input, capping the aggregate at N × total), and a halo-free
   data/head split moves *exactly* the unsharded bytes — any overhead
   must come from declared halo rows or rowblock operand replication.
+
+Schema-6 sweep points carrying ``mesh_exec`` (measured real-mesh
+execution) additionally pass the **mesh claims**
+(:data:`MESH_CLAIMS`), which pin the measurements to physics and to
+the plan's wire accounting:
+
+* **collective_cost** — the measured timings are sane (mesh wall > 0,
+  virtual analogue > 0, collective ≥ 0, devices matches the shard
+  plan's width) and the collective time is *consistent with the
+  plan*: a plan that wires zero bytes (``shard_spec.wire_bytes == 0``
+  — data/head/halo-free splits exchange nothing) must measure zero
+  collective time, a plan with halo rows on a multi-device mesh must
+  measure a nonzero one, the collective can't dominate the whole step
+  by more than the probe's own overhead allows (collective ≤ 8 ×
+  wall), and the implied wire bandwidth (wire_bytes / collective
+  time) stays below any real interconnect (≤ 1 TB/s) — a hand-edited
+  "collectives are free" record fails here.
+* **mesh_skew** — the real-vs-virtual story holds together: the
+  recorded skew equals mesh_wall/virtual, sits inside a generous
+  anti-flake band (1/200 ≤ skew ≤ 200 — host-CPU "devices" share one
+  socket, so real walls legitimately exceed the modeled clock, but an
+  out-of-band skew means one of the two timing paths is broken), and
+  the real-mesh output matched the oracle within the dtype tolerance
+  (``mesh_max_err``) — the measured execution that produced the wall
+  time computed the right answer through real ppermute halo exchange.
 """
 from __future__ import annotations
 
@@ -58,9 +83,10 @@ from ..core.hw import PLATFORMS, TPU_V5E, HardwareSpec
 from ..core.intensity import KernelTraits
 from .records import BenchRecord, RecordSet, ServingRecord
 
-__all__ = ["CLAIMS", "ClaimResult", "SERVING_CLAIMS", "SHARD_CLAIMS",
-           "TOLERANCE", "ceiling_bound", "check_record", "check_records",
-           "check_serving_record", "hw_for", "violations"]
+__all__ = ["CLAIMS", "ClaimResult", "MESH_CLAIMS", "SERVING_CLAIMS",
+           "SHARD_CLAIMS", "TOLERANCE", "ceiling_bound", "check_record",
+           "check_records", "check_serving_record", "hw_for",
+           "violations"]
 
 #: Claim identifiers, in report order.
 CLAIMS = ("ceiling", "routing", "accuracy", "boundedness")
@@ -72,6 +98,24 @@ SERVING_CLAIMS = ("ceiling", "routing", "boundedness", "percentiles",
 #: Extra claims for sweep points that executed under a mesh (schema 5
 #: records with a ``shard_spec``), in report order.
 SHARD_CLAIMS = ("shard_ceiling", "shard_traffic")
+
+#: Extra claims for sweep points that *measured* a real multi-device
+#: mesh execution (schema 6 records with ``mesh_exec``), in report
+#: order.
+MESH_CLAIMS = ("collective_cost", "mesh_skew")
+
+#: Ceiling on the wire bandwidth a measured collective may imply
+#: (wire_bytes / collective seconds).  1 TB/s comfortably exceeds any
+#: host interconnect and sits above v5e ICI per-link rates, so only a
+#: fabricated "collectives are free" record trips it.
+_MAX_WIRE_BW = 1e12
+
+#: Anti-flake band for the real-vs-virtual wall-clock skew.  Forced
+#: host "devices" share one CPU socket, so a real mesh step
+#: legitimately costs tens of times the modeled max-shard clock
+#: (measured 5-45x on a 4-way host mesh); a skew outside
+#: [1/200, 200] means one of the two timing paths broke.
+_SKEW_BAND = 200.0
 
 #: Max abs error allowed between an engine variant and its oracle.
 #: bfloat16 has an 8-bit mantissa, so elementwise results on O(10)
@@ -217,6 +261,61 @@ def _shard_checks(rec: BenchRecord,
     return [shard_ceiling, shard_traffic]
 
 
+def _mesh_checks(rec: BenchRecord,
+                 hw: HardwareSpec) -> List[ClaimResult]:
+    """The MESH_CLAIMS for one measured real-mesh point (module docs).
+
+    Ties the three measured timings to each other and to the shard
+    plan's wire accounting: a record cannot claim a free collective
+    over declared halo bytes, an impossible wire bandwidth, or a
+    real-vs-virtual skew the shared-socket host platform cannot
+    produce — and the wall time only counts if the real execution
+    that produced it reproduced the oracle.
+    """
+    mex = dict(rec.mesh_exec or {})
+    spec = dict(rec.shard_spec or {})
+    devices = int(mex.get("devices", 0))
+    wall = float(mex.get("mesh_wall_us", 0.0))
+    coll = float(mex.get("collective_us", -1.0))
+    virt = float(mex.get("virtual_us", 0.0))
+    skew = float(mex.get("skew", 0.0))
+    wire = float(spec.get("wire_bytes", 0.0))
+    n = int(spec.get("num_shards", 0))
+
+    sane = (wall > 0.0 and virt > 0.0 and coll >= 0.0
+            and 1 <= devices and devices == n)
+    if wire <= 0.0:
+        wire_ok = coll == 0.0
+        wire_detail = "plan wires 0 B -> collective must measure 0"
+    else:
+        # halo bytes really crossed the mesh: nonzero measured time,
+        # not dominating the step beyond probe overhead, and implying
+        # a physically possible wire bandwidth
+        bw = wire / (coll * 1e-6) if coll > 0 else float("inf")
+        wire_ok = (devices < 2) or (0.0 < coll <= 8.0 * wall
+                                    and bw <= _MAX_WIRE_BW)
+        wire_detail = (f"wire {wire:.4g} B in {coll:.4g} us -> "
+                       f"{bw / 1e9:.4g} GB/s")
+    collective_cost = ClaimResult(
+        "collective_cost", rec, sane and wire_ok,
+        f"devices={devices}/{n} wall={wall:.4g} us "
+        f"coll={coll:.4g} us virt={virt:.4g} us; {wire_detail}")
+
+    tol = TOLERANCE.get(rec.dtype, TOLERANCE["float32"])
+    mesh_err = float(mex.get("mesh_max_err", float("inf")))
+    skew_expect = wall / virt if virt > 0 else 0.0
+    skew_ok = (virt > 0
+               and abs(skew - skew_expect) <= 0.01 * max(skew_expect, 1.0)
+               and 1.0 / _SKEW_BAND <= skew <= _SKEW_BAND
+               and mesh_err <= tol)
+    mesh_skew = ClaimResult(
+        "mesh_skew", rec, skew_ok,
+        f"skew {skew:.4g} (= wall {wall:.4g} / virtual {virt:.4g}) in "
+        f"[1/{_SKEW_BAND:g}, {_SKEW_BAND:g}]; mesh_max_err "
+        f"{mesh_err:.3g} vs {rec.dtype} tolerance {tol:g}")
+    return [collective_cost, mesh_skew]
+
+
 def check_record(rec: BenchRecord,
                  hw: HardwareSpec = TPU_V5E) -> Tuple[ClaimResult, ...]:
     """Verify all four paper claims (Eq. 4, Eq. 17/23/24, §6) for one record.
@@ -226,7 +325,9 @@ def check_record(rec: BenchRecord,
     intensity so a stale or hand-edited record cannot pass silently.
     Mesh sweep points (schema 5 with a ``shard_spec``) additionally get
     one result per entry in :data:`SHARD_CLAIMS` — the per-device
-    verdict re-checked per shard.
+    verdict re-checked per shard — and measured real-mesh points
+    (schema 6 with ``mesh_exec``) one per entry in
+    :data:`MESH_CLAIMS`.
     """
     ceiling, routing, boundedness = _analytic_checks(rec, hw)
 
@@ -237,6 +338,8 @@ def check_record(rec: BenchRecord,
     out = [ceiling, routing, accuracy, boundedness]
     if rec.shard_spec:
         out.extend(_shard_checks(rec, hw))
+    if rec.mesh_exec:
+        out.extend(_mesh_checks(rec, hw))
     return tuple(out)
 
 

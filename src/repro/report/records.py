@@ -19,7 +19,13 @@ into typed rows.  Five file schemas are accepted:
   (the ShardPlan the point executed under — kind/num_shards/axis/halo
   — with its traffic accounting: per-shard bytes, aggregate vs.
   unsharded bytes, worst per-shard intensity), both null for
-  single-device sweep points.
+  single-device sweep points,
+* schema 6 -- schema 5 plus the optional per-record ``mesh_exec``:
+  *measured* real-mesh execution evidence from a ``--real`` sweep
+  (one ``shard_map`` step over N actual XLA devices — mesh wall µs,
+  the ppermute halo exchange's own collective µs, the virtual-clock
+  analogue µs, their skew, and the real-mesh max error vs. the
+  oracle), null for single-device and virtual-mesh points.
 
 Bench records are (kernel, engine, size, dtype) sweep points carrying
 the measured reference time, the max error vs. the oracle, and the
@@ -75,6 +81,10 @@ class BenchRecord:
     # plan + traffic accounting it executed with; None = single device
     mesh_shape: Optional[Tuple[int, ...]] = None
     shard_spec: Optional[Mapping[str, Any]] = None
+    # schema 6: measured real-mesh execution evidence ({"mode": "mesh",
+    # "devices": N, "mesh_wall_us", "collective_us", "virtual_us",
+    # "skew", "mesh_max_err", ...}); None = no real-mesh run
+    mesh_exec: Optional[Mapping[str, Any]] = None
 
     @property
     def num_shards(self) -> int:
@@ -185,6 +195,12 @@ class ServingRecord:
     # of the comparability contract: p99 under a 2-way mesh must never
     # gate against a single-device baseline.
     num_shards: Optional[int] = None
+    # how sharded batches were charged: "virtual" (modeled
+    # max-over-shards clock) or "mesh" (measured shard_map wall time
+    # on real devices); None = unsharded/legacy.  Part of the
+    # comparability contract too: measured p99 never gates against a
+    # modeled one.
+    mesh_exec_mode: Optional[str] = None
 
     @property
     def point(self) -> Tuple[str, str, str, int, str, int]:
@@ -257,6 +273,15 @@ def _to_record(raw: Mapping[str, Any], path: str) -> BenchRecord:
                              f"with a 'num_shards' field, got "
                              f"{shard_spec!r}")
         shard_spec = dict(shard_spec)
+    mesh_exec = raw.get("mesh_exec")
+    if mesh_exec is not None:
+        needed = ("devices", "mesh_wall_us", "collective_us",
+                  "virtual_us")
+        if not isinstance(mesh_exec, Mapping) or \
+                any(k not in mesh_exec for k in needed):
+            raise ValueError(f"{path}: mesh_exec must be an object "
+                             f"with {needed} fields, got {mesh_exec!r}")
+        mesh_exec = dict(mesh_exec)
     return BenchRecord(
         kernel=str(raw["kernel"]),
         engine=str(raw["engine"]),
@@ -277,6 +302,7 @@ def _to_record(raw: Mapping[str, Any], path: str) -> BenchRecord:
         tile_config=tile_config,
         mesh_shape=mesh_shape,
         shard_spec=shard_spec,
+        mesh_exec=mesh_exec,
     )
 
 
@@ -317,13 +343,16 @@ def _to_serving_record(raw: Mapping[str, Any], path: str) -> ServingRecord:
                    if raw.get("max_batch") is not None else None),
         num_shards=(int(raw["num_shards"])
                     if raw.get("num_shards") is not None else None),
+        mesh_exec_mode=(str(raw["mesh_exec_mode"])
+                        if raw.get("mesh_exec_mode") is not None
+                        else None),
         **{k: (float(v) if v is not None else None)
            for k, v in opt.items()},
     )
 
 
 def load_file(path: str) -> RecordSet:
-    """Parse one BENCH_*.json (schema 1-5) into a RecordSet.
+    """Parse one BENCH_*.json (schema 1-6) into a RecordSet.
 
     Schema 4 payloads (``"kind": "serving"``) load as
     :class:`ServingRecord` rows; earlier schemas as
@@ -338,9 +367,9 @@ def load_file(path: str) -> RecordSet:
         schema, env, raw_records = 1, {}, payload
     elif isinstance(payload, dict):
         schema = int(payload.get("schema", 0))
-        if schema not in (2, 3, 4, 5):
+        if schema not in (2, 3, 4, 5, 6):
             raise ValueError(f"{path}: unsupported schema {schema!r} "
-                             f"(expected 1-list, 2, 3, 4, or 5)")
+                             f"(expected 1-list, 2, 3, 4, 5, or 6)")
         if schema == 4:
             kind = str(payload.get("kind", "serving"))
             if kind != "serving":

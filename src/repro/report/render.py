@@ -12,11 +12,16 @@ Turns loaded record sets + claim results into:
   serve``): per-session latency percentiles and goodput with a
   vpu-vs-mxu-under-load comparison per kernel, plus
   ``docs/benchmarks/<kernel>-serving.md`` session pages,
-* a **sharded execution** section (schema-5 mesh records from
-  ``benchmarks.run sweep --mesh N``): per-point shard claims
+* a **sharded execution** section (schema-5/6 mesh records from
+  ``benchmarks.run sweep --mesh N [--real]``): per-point shard claims
   (per-shard Eq. 23/24 ceiling, aggregate-bandwidth consistency) and
   the halo/replication overhead each split pays, plus
-  ``docs/benchmarks/<kernel>-mesh<N>.md`` pages.
+  ``docs/benchmarks/<kernel>-mesh<N>.md`` pages.  Schema-6 records
+  measured on a real host-device mesh additionally carry a
+  ``mesh_exec`` block, rendered as the **Measured collectives**
+  sub-table: wall time of the one ``shard_map`` program, the isolated
+  ``ppermute``-ring cost of its halo exchange, and the skew against
+  the virtual max-over-shards clock.
 
 Rendering is a pure function of the committed ``runs/`` records -- no
 timestamps, no environment probes at render time -- so regenerating the
@@ -260,8 +265,8 @@ def _sharded_section(sharded: Sequence[RecordSet],
     add = lines.append
     add("## Sharded execution")
     add("")
-    add("Schema-5 mesh records from `python -m benchmarks.run sweep "
-        "--mesh N`: every engine variant executed shard by shard "
+    add("Schema-5/6 mesh records from `python -m benchmarks.run sweep "
+        "--mesh N [--real]`: every engine variant executed shard by shard "
         "(`repro.sharding` — data/rowblock/head splits, halo rows "
         "exchanged for stencils) and re-verified. The *shard claims* "
         "hold the paper's per-device verdict on every shard: the worst "
@@ -307,6 +312,74 @@ def _sharded_section(sharded: Sequence[RecordSet],
         add(f"**{fails} shard-claim violation(s) across {points} mesh "
             "points — see per-kernel mesh pages.**")
     add("")
+    lines.extend(_collectives_section(sharded))
+    return lines
+
+
+def _collectives_section(sharded: Sequence[RecordSet]) -> List[str]:
+    """The REPORT.md measured-collectives block (schema-6 ``--real``).
+
+    One row per mesh point that executed on a real host-device mesh:
+    the measured wall of the single ``shard_map`` program, the
+    isolated ``ppermute``-ring collective cost (0 µs whenever the
+    plan's ``wire_bytes`` is 0 — only halo'd splits pay the wire), the
+    virtual max-over-shards clock for the same point, and their skew.
+    If the sweep ran the §4.1 overlap probe, its
+    overlapped-vs-serialized matmul timings close the section.
+    """
+    rows = [(rs, rec) for rs in sharded for rec in rs.records
+            if rec.mesh_exec]
+    if not rows:
+        return []
+    lines: List[str] = []
+    add = lines.append
+    add("### Measured collectives")
+    add("")
+    add("Schema-6 points from `python -m benchmarks.run sweep --mesh N "
+        "--real`: the same shard plan lowered to one `shard_map` "
+        "program over N real XLA host devices, halo rows crossing the "
+        "mesh via `ppermute` rings. *coll µs* times the ring alone (a "
+        "twin program that runs only the exchange), so a zero-wire "
+        "plan must — and does — measure 0. *skew* is measured wall "
+        "over the virtual max-over-shards clock: the host devices "
+        "share one socket's bandwidth, so walls land well above the "
+        "virtual model — the mesh run is a correctness + collective "
+        "measurement, not a throughput claim (§4.1: what matters is "
+        "that the exchange can hide behind compute).")
+    add("")
+    add("| kernel | mesh | engine | size | dtype | wire bytes | "
+        "coll µs | mesh wall µs | virtual µs | skew | mesh max err |")
+    add("|---|---|---|---|---|---|---|---|---|---|---|")
+    for rs, rec in rows:
+        me = dict(rec.mesh_exec)
+        spec = dict(rec.shard_spec or {})
+        add("| " + " | ".join([
+            rec.kernel, f"{me.get('devices', rec.mesh_devices)}-way",
+            rec.engine, str(rec.size), rec.dtype,
+            _fmt(spec.get("wire_bytes")),
+            _fmt(me.get("collective_us")),
+            _fmt(me.get("mesh_wall_us")),
+            _fmt(me.get("virtual_us")),
+            f"{_fmt(me.get('skew'))}x",
+            _fmt(me.get("mesh_max_err"), 3),
+        ]) + " |")
+    add("")
+    probes = {}
+    for rs in sharded:
+        probe = rs.env.get("collective_overlap")
+        if isinstance(probe, dict):
+            key = (probe.get("devices"), str(probe.get("shape")))
+            probes[key] = probe
+    for _, probe in sorted(probes.items(), key=lambda kv: str(kv[0])):
+        add(f"Overlap probe ({probe.get('devices')} devices, shape "
+            f"{probe.get('shape')}): ring all-gather matmul "
+            f"{_fmt(probe.get('ring_us'))} µs vs serialized "
+            f"{_fmt(probe.get('serialized_us'))} µs "
+            f"(gain {_fmt(probe.get('overlap_gain'))}x), row-parallel "
+            f"{_fmt(probe.get('rowparallel_us'))} µs — the resurrected "
+            "`collective_matmul` variants validated against the "
+            "unsharded product on the live mesh.")
+        add("")
     return lines
 
 
@@ -454,6 +527,7 @@ def render_kernel_page(rs: RecordSet) -> str:
         f"verified against the `{hw.name}` model "
         f"(B_vec = {_fmt(machine_balance(hw, 'vector'))} flop/byte, "
         f"α = {_fmt(hw.alpha)}). Regenerate with `{_REGEN}`.")
+    real = any(rec.mesh_exec for rec in rs.records)
     if mesh > 1:
         add("")
         add(f"Every point executed shard by shard under a {mesh}-way "
@@ -462,15 +536,26 @@ def render_kernel_page(rs: RecordSet) -> str:
             "and head/row splits are correctness-gated evidence. "
             f"Produce new points with `python -m benchmarks.run sweep "
             f"--mesh {mesh}`.")
+        if real:
+            add("")
+            add("Points carry schema-6 `mesh_exec` evidence (`--real`): "
+                f"the plan ran as one `shard_map` program over {mesh} "
+                "real host devices. *mesh wall µs* is the measured "
+                "program wall, *coll µs* isolates the `ppermute` halo "
+                "ring (0 when the plan moves no wire bytes), and "
+                "*skew* divides the measured wall by the virtual "
+                "max-over-shards clock.")
     add("")
     shard_cols = ("| kind | halo | agg/total | shard floor µs "
                   if mesh > 1 else "")
+    real_cols = ("| mesh wall µs | coll µs | skew " if real else "")
     add("| engine | size | dtype | ref µs (median) | IQR µs | iters | "
         "pred µs v5e | I (Eq. 2) | memory-bound | auto | MXU ceiling | "
         f"Eq. 23/24 bound | max err | tile config | tuned Δ {shard_cols}"
-        "| claims |")
+        f"{real_cols}| claims |")
     add("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|"
-        + ("---|" * 4 if mesh > 1 else "") + "---|")
+        + ("---|" * 4 if mesh > 1 else "")
+        + ("---|" * 3 if real else "") + "---|")
     checked = _check_set(rs)
     for rec, crs in checked:
         failed = [c.claim for c in crs if not c.passed]
@@ -493,6 +578,14 @@ def render_kernel_page(rs: RecordSet) -> str:
                 str(spec.get("kind", "—")), str(spec.get("halo", "—")),
                 f"{_fmt(agg / total)}x" if total else "—",
                 _fmt(spec.get("pred_shard_us_v5e")),
+            ]
+        if real:
+            me = dict(rec.mesh_exec or {})
+            cells += [
+                _fmt(me.get("mesh_wall_us")),
+                _fmt(me.get("collective_us")),
+                (f"{_fmt(me.get('skew'))}x"
+                 if me.get("skew") is not None else "—"),
             ]
         add("| " + " | ".join(cells + [verdict]) + " |")
     add("")

@@ -25,6 +25,16 @@ memoized Advice, same tuned tiles), and the batch is charged the
 **shard-parallel** compute time — the slowest shard, which is what an
 N-device mesh would fold into the virtual clock.  The per-request
 fallback shards each request the same way.
+
+With ``real_mesh=True`` the same split executes through
+:class:`repro.sharding.executor.MeshExecutor` instead: one
+``shard_map`` step over ``num_shards`` actual XLA devices, and the
+batch compute charged to the virtual clock is the **measured** mesh
+wall time (collectives and all) rather than the modeled
+max-over-shards — the serving percentiles then rest on real
+multi-device executions.  Requires the process to expose enough host
+devices (``repro.launch.mesh.host_device_count`` before JAX init;
+``benchmarks.run serve --real`` does this).
 """
 from __future__ import annotations
 
@@ -39,6 +49,7 @@ from ..core.dispatch import (DEFAULT_DISPATCHER, ELEMENTWISE_BLOCK_ROWS,
                              ELEMENTWISE_LANES)
 from ..kernels import registry
 from ..sharding import ShardedExecutor
+from ..sharding.executor import MeshExecutor
 from .requests import Request
 from .scheduler import BatchExecution
 
@@ -55,18 +66,28 @@ class KernelBatchExecutor:
     ``num_shards > 1`` splits every launch across a data-axis mesh via
     ``repro.sharding`` and charges batches the shard-parallel (max)
     compute time — the Eq. 23/24 verdict per shard, aggregated.
+    ``real_mesh=True`` upgrades that charge from modeled to measured:
+    launches run through :class:`MeshExecutor` on real devices and
+    ``parallel_s`` is the shard_map step's wall time.
     """
 
     def __init__(self, engine: str = "auto", *, max_batch: int = 8,
                  interpret: bool = True, seed: int = 0,
-                 num_shards: int = 1):
+                 num_shards: int = 1, real_mesh: bool = False):
         self.engine = engine
         self.max_batch = max_batch
         self.interpret = interpret
         self.num_shards = max(1, int(num_shards))
-        self._shard_exec = (ShardedExecutor(self.num_shards,
-                                            interpret=interpret)
-                            if self.num_shards > 1 else None)
+        self.real_mesh = bool(real_mesh) and self.num_shards > 1
+        if self.real_mesh:
+            # same plan()/run(...).parallel_s surface as the virtual
+            # executor, so the packed/fallback paths below are
+            # execution-mode agnostic
+            self._shard_exec = MeshExecutor(self.num_shards)
+        else:
+            self._shard_exec = (ShardedExecutor(self.num_shards,
+                                                interpret=interpret)
+                                if self.num_shards > 1 else None)
         self._rng = np.random.default_rng(seed)
         # (kernel, size, dtype) -> canonical (args, kwargs): request
         # payloads are synthetic, so one input per shape is reused --

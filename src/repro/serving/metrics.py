@@ -128,6 +128,7 @@ def serving_record(summary: ServingSummary, *, kernel: str, engine: str,
                    max_batch: Optional[int] = None,
                    max_wait_ms: Optional[float] = None,
                    num_shards: int = 1,
+                   mesh_exec_mode: Optional[str] = None,
                    results: Optional[Sequence[RequestResult]] = None,
                    ) -> Dict:
     """One schema-4 serving record: summary + analytic join fields.
@@ -140,10 +141,17 @@ def serving_record(summary: ServingSummary, *, kernel: str, engine: str,
     ``max_wait_ms``) and the mesh width (``num_shards`` — batches were
     charged shard-parallel compute) ride along so the compare gate can
     refuse to join sessions formed under different policies.
+    ``mesh_exec_mode`` says how sharded batches were charged:
+    ``"virtual"`` = modeled max-over-shards clock, ``"mesh"`` =
+    measured shard_map wall time on real devices — also part of the
+    comparability contract (a measured p99 must not gate against a
+    modeled one).
     """
     del results  # per-request samples stay in-process; records are sums
     return {
         "num_shards": int(num_shards),
+        "mesh_exec_mode": (str(mesh_exec_mode)
+                           if mesh_exec_mode is not None else None),
         "max_batch": (int(max_batch) if max_batch is not None else None),
         "max_wait_ms": (round(float(max_wait_ms), 3)
                         if max_wait_ms is not None else None),

@@ -37,6 +37,9 @@ class SessionConfig:
     slo: SLO = DEFAULT_SLO
     trace_path: Optional[str] = None
     num_shards: int = 1          # mesh shards per launch (1 = no mesh)
+    # execute sharded launches on real devices (MeshExecutor, measured
+    # wall time) instead of the virtual clock's modeled max-over-shards
+    real_mesh: bool = False
 
 
 def run_session(cfg: SessionConfig, executor=None,
@@ -56,7 +59,8 @@ def run_session(cfg: SessionConfig, executor=None,
         executor = KernelBatchExecutor(engine=cfg.engine,
                                        max_batch=cfg.policy.max_batch,
                                        seed=cfg.seed,
-                                       num_shards=cfg.num_shards)
+                                       num_shards=cfg.num_shards,
+                                       real_mesh=cfg.real_mesh)
     if source is None:
         source = make_loadgen(cfg.workload, cfg.kernel,
                               rate_rps=cfg.rate_rps, size=cfg.size,
@@ -83,5 +87,7 @@ def run_session(cfg: SessionConfig, executor=None,
         mxu_ceiling=advice.max_speedup_matrix,
         max_batch=cfg.policy.max_batch,
         max_wait_ms=cfg.policy.max_wait_s * 1e3,
-        num_shards=cfg.num_shards)
+        num_shards=cfg.num_shards,
+        mesh_exec_mode=(("mesh" if cfg.real_mesh else "virtual")
+                        if cfg.num_shards > 1 else None))
     return log, summary, record

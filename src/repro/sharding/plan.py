@@ -351,15 +351,36 @@ def traffic(op, plan: ShardPlan, args: tuple,
     analytic layer.  ``agg_bytes − total_bytes`` is exactly the halo
     duplication; for data/head splits it is 0 and the per-shard
     intensity equals the global one.
+
+    ``wire_bytes`` is the subset of that duplication a real mesh must
+    actually move between devices: the halo rows a rowblock split
+    borrows from its neighbours (Σ over shards of (lo+hi) × row
+    bytes — what the ``ppermute`` ring exchanges on the mesh
+    executor).  Data/head splits and the halo-free SpMV rowblock
+    split wire nothing: their "extra" reads (the replicated SpMV
+    ``x``) are device-local re-reads, not exchanged bytes.  The
+    ``collective_cost`` claim holds each record's measured collective
+    time consistent with this number.
     """
     total = op.traits(*args, **kwargs)
     shard_traits = [op.traits(*sa, **skw) for sa, skw in
                     (shard_call(plan, s, args, kwargs)
                      for s in plan.shards)]
     agg = float(sum(t.traffic_bytes for t in shard_traits))
+    wire = 0.0
+    if plan.spec.kind == "rowblock" and plan.spec.halo > 0:
+        first = args[0]
+        if not hasattr(first, "blocks"):    # stencil grid rows
+            row_elems = 1
+            for d in first.shape[1:]:
+                row_elems *= int(d)
+            row_bytes = row_elems * first.dtype.itemsize
+            wire = float(sum(s.lo + s.hi for s in plan.shards)
+                         * row_bytes)
     return {
         "total_bytes": float(total.traffic_bytes),
         "agg_bytes": agg,
+        "wire_bytes": wire,
         # the two worsts are taken independently: the biggest mover
         # sets the per-shard memory floor, the highest intensity is
         # what the shard_ceiling claim must hold below B_vector — on a

@@ -45,7 +45,7 @@ def _write_set(path, records, schema=2, kernel="scale"):
 
 # -- ingestion --------------------------------------------------------------
 
-def test_load_committed_runs_schema5():
+def test_load_committed_runs_schema6():
     sets = load_dir(str(RUNS))
     keys = [(s.kernel, s.kind, s.mesh_devices) for s in sets]
     assert keys == sorted(keys)
@@ -57,7 +57,7 @@ def test_load_committed_runs_schema5():
         if s.kind == "serving":
             assert s.schema == 4  # serving sessions live in schema 4
             continue
-        assert s.schema == 5
+        assert s.schema == 6
         assert "jax" in s.env and "device" in s.env
         assert s.env["interpret"] is True
         for rec in s.records:
@@ -396,3 +396,128 @@ def test_compare_gate(tmp_path):
     # a filter matching nothing must fail, not pass vacuously
     msgs = "\n".join(compare(str(base), str(cand), kernels=["triad"]))
     assert "empty comparison" in msgs
+
+
+# -- schema 6: measured real-mesh execution ---------------------------------
+
+def _mesh_exec(**overrides):
+    """Healthy measured evidence for _shard_spec()'s halo-free 2-way
+    split: zero wire bytes -> zero collective."""
+    mex = {"mode": "mesh", "devices": 2, "mesh_wall_us": 500.0,
+           "mesh_iqr_us": 10.0, "collective_us": 0.0,
+           "virtual_us": 100.0, "skew": 5.0, "mesh_max_err": 0.0}
+    mex.update(overrides)
+    return mex
+
+
+def _write_schema6(path, records, kernel="scale", mesh=2):
+    payload = {"schema": 6, "kernel": kernel,
+               "env": {"jax": "0", "device": "cpu", "interpret": True,
+                       "hw_model": "TPU-v5e", "mesh_shape": [mesh],
+                       "mesh_exec_mode": "mesh"},
+               "records": records}
+    path.write_text(json.dumps(payload))
+
+
+def test_schema6_mesh_exec_round_trip(tmp_path):
+    p = tmp_path / "BENCH_scale_mesh2.json"
+    _write_schema6(p, [_raw(mesh_shape=[2], shard_spec=_shard_spec(),
+                            mesh_exec=_mesh_exec())])
+    rs = load_file(str(p))
+    assert rs.schema == 6 and rs.mesh_devices == 2
+    rec = rs.records[0]
+    assert rec.mesh_exec["mesh_wall_us"] == 500.0
+    assert not violations(check_records([rs]))
+
+
+def test_schema6_rejects_malformed_mesh_exec(tmp_path):
+    p = tmp_path / "BENCH_scale_mesh2.json"
+    _write_schema6(p, [_raw(mesh_shape=[2], shard_spec=_shard_spec(),
+                            mesh_exec={"mode": "mesh"})])
+    with pytest.raises(ValueError, match="mesh_exec"):
+        load_file(str(p))
+
+
+@pytest.mark.parametrize("spec_overrides,mex_overrides,expect", [
+    # a plan that wires nothing cannot measure a nonzero collective
+    ({}, {"collective_us": 50.0}, "collective_cost"),
+    # halo bytes on a 2-way mesh must cost *something*
+    ({"kind": "rowblock", "halo": 3, "wire_bytes": 3072.0},
+     {"collective_us": 0.0}, "collective_cost"),
+    # implied wire bandwidth beyond any interconnect (1 GB in 1 us)
+    ({"kind": "rowblock", "halo": 3, "wire_bytes": 1e9},
+     {"collective_us": 1.0}, "collective_cost"),
+    # devices disagreeing with the plan's width
+    ({}, {"devices": 4}, "collective_cost"),
+    # recorded skew inconsistent with wall/virtual
+    ({}, {"skew": 2.0}, "mesh_skew"),
+    # skew outside the anti-flake band (wall 500000x virtual)
+    ({}, {"mesh_wall_us": 5e7, "skew": 5e5}, "mesh_skew"),
+    # the real execution produced the wrong answer
+    ({}, {"mesh_max_err": 1.0}, "mesh_skew"),
+])
+def test_mesh_claim_violations_detected(tmp_path, spec_overrides,
+                                        mex_overrides, expect):
+    p = tmp_path / "BENCH_scale_mesh2.json"
+    _write_schema6(p, [_raw(
+        mesh_shape=[2], shard_spec=_shard_spec(**spec_overrides),
+        mesh_exec=_mesh_exec(**mex_overrides))])
+    bad = violations(check_records([load_file(str(p))]))
+    assert expect in {v.claim for v in bad}, (
+        f"{spec_overrides}/{mex_overrides} should violate {expect}")
+
+
+def test_compare_gates_measured_mesh_wall(tmp_path):
+    from benchmarks.compare import compare
+
+    base, cand = tmp_path / "base", tmp_path / "cand"
+    base.mkdir(), cand.mkdir()
+    point = _raw(mesh_shape=[2], shard_spec=_shard_spec(),
+                 mesh_exec=_mesh_exec())
+    _write_schema6(base / "BENCH_scale_mesh2.json", [point])
+    # identical candidate: clean
+    _write_schema6(cand / "BENCH_scale_mesh2.json", [point])
+    assert compare(str(base), str(cand)) == []
+    # 3x slower measured wall (ref time unchanged): caught
+    slow = _raw(mesh_shape=[2], shard_spec=_shard_spec(),
+                mesh_exec=_mesh_exec(mesh_wall_us=1500.0, skew=15.0))
+    _write_schema6(cand / "BENCH_scale_mesh2.json", [slow])
+    msgs = "\n".join(compare(str(base), str(cand)))
+    assert "mesh_wall_us" in msgs
+    # a virtual-only candidate re-sweep is not blamed for timings it
+    # never took (claims/coverage own schema drift, not the perf gate)
+    _write_schema5(cand / "BENCH_scale_mesh2.json",
+                   [_raw(mesh_shape=[2], shard_spec=_shard_spec())])
+    assert all("mesh_wall_us" not in m
+               for m in compare(str(base), str(cand)))
+
+
+def test_serving_mesh_exec_mode_is_a_config_knob(tmp_path):
+    """A measured-mesh serving session must refuse to gate against a
+    virtual-clock baseline: the two p99s are not comparable."""
+    from benchmarks.compare import compare
+
+    base, cand = tmp_path / "base", tmp_path / "cand"
+    base.mkdir(), cand.mkdir()
+
+    def serving_payload(mode):
+        rec = {"kernel": "scale", "engine": "vector",
+               "engine_auto": "vector", "workload": "poisson",
+               "rate_rps": 32.0, "duration_s": 1.0, "size": 8192,
+               "dtype": "float32", "seed": 0, "offered": 30,
+               "completed": 30, "p50_ms": 1.0, "p95_ms": 2.0,
+               "p99_ms": 3.0, "queue_p50_ms": 0.5,
+               "compute_p50_ms": 0.5, "goodput_rps": 30.0,
+               "slo_ms": 50.0, "slo_attainment": 1.0,
+               "intensity": 0.125, "memory_bound": True,
+               "mxu_ceiling": 1.0, "num_shards": 2,
+               "mesh_exec_mode": mode}
+        return {"schema": 4, "kind": "serving", "kernel": "scale",
+                "env": {}, "records": [rec]}
+
+    (base / "BENCH_serve_scale.json").write_text(
+        json.dumps(serving_payload("virtual")))
+    (cand / "BENCH_serve_scale.json").write_text(
+        json.dumps(serving_payload("mesh")))
+    msgs = "\n".join(compare(str(base), str(cand), kind="serving"))
+    assert "config mismatch" in msgs and "mesh_exec_mode" in msgs

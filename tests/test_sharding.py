@@ -300,3 +300,98 @@ def test_serving_batcher_reports_shard_count():
     # every launched batch was split 2-way and charged a finite,
     # positive shard-parallel compute time
     assert all(b[4] > 0 for b in log.batches)
+
+
+# --------------------------------------------------------------------------
+# Real mesh execution (single-device fast paths; the multi-device
+# equivalence runs live in tests/test_distributed.py subprocesses)
+# --------------------------------------------------------------------------
+def test_mesh_executor_needs_enough_devices():
+    """In this single-device test process a 2-way MeshExecutor must
+    refuse loudly and point at host_device_count, never fall back to
+    quietly simulating."""
+    from repro.sharding import MeshExecutor
+    with pytest.raises(RuntimeError, match="host_device_count"):
+        MeshExecutor(2)
+    with pytest.raises(ValueError):
+        MeshExecutor(0)
+
+
+def test_mesh_executor_one_device_runs_and_measures():
+    """Width 1 is the degenerate real mesh: no collectives (empty
+    ppermute rings yield the zero boundary), output matches the
+    oracle, and measure() reports a zero collective."""
+    from repro.sharding import MeshExecutor
+    mex = MeshExecutor(1)
+    rng = np.random.default_rng(0)
+    for name in ("scale", "stencil"):
+        op = registry.get(name)
+        args, kw = op.make_inputs(rng, op.test_size, "float32")
+        run = mex.run(op, *args, **kw)
+        assert run.devices == 1
+        assert run.parallel_s == run.wall_s  # batcher contract
+        np.testing.assert_allclose(np.asarray(run.out),
+                                   np.asarray(op.reference(*args, **kw)),
+                                   atol=2e-4)
+        m = mex.measure(op, *args, **kw)
+        assert m["collective_us"] == 0.0 and m["mesh_wall_us"] > 0
+
+
+def test_host_device_count_post_init_paths():
+    """After JAX initialized (this process: 1 device), asking for more
+    devices raises with the fix; asking for what we have is a no-op."""
+    from repro.launch.mesh import host_device_count
+    have = len(jax.devices())
+    assert host_device_count(have) == have
+    with pytest.raises(RuntimeError, match="already initialized"):
+        host_device_count(have + 1)
+    with pytest.raises(ValueError):
+        host_device_count(0)
+
+
+def test_traffic_wire_bytes_accounting():
+    """wire_bytes = exactly the halo rows a real mesh must move:
+    zero for data/head/halo-free splits, lo+hi rows x row bytes for
+    the stencil exchange."""
+    rng = np.random.default_rng(0)
+    for name in ("scale", "spmv", "attention"):
+        op = registry.get(name)
+        args, kw = op.make_inputs(rng, op.test_size, "float32")
+        plan = plan_for(op, 2, *args, **kw)
+        assert traffic(op, plan, args, kw)["wire_bytes"] == 0.0
+    op = registry.get("stencil")
+    args, kw = op.make_inputs(rng, 48, "float32")
+    plan = plan_for(op, 2, *args, **kw)
+    u = args[0]
+    row_bytes = int(np.prod(u.shape[1:])) * u.dtype.itemsize
+    expect = sum(s.lo + s.hi for s in plan.shards) * row_bytes
+    assert traffic(op, plan, args, kw)["wire_bytes"] == expect > 0
+
+
+def test_dispatcher_mesh_mode_stamped_on_advice():
+    d = Dispatcher(mesh_shards=2)
+    op = registry.get("scale")
+    rng = np.random.default_rng(0)
+    args, kw = op.make_inputs(rng, 4096, "float32")
+    assert d.mesh_mode == "virtual"
+    assert d.advise(op, *args, **kw).exec_mode == "virtual"
+    d.set_mesh(2, "mesh")
+    advice = d.advise(op, *args, **kw)
+    assert advice.exec_mode == "mesh"
+    assert advice.shard_spec is not None
+    with pytest.raises(ValueError, match="mesh mode"):
+        d.set_mesh(2, "warp")
+    # mode is part of the memo contract: switching back re-advises
+    d.set_mesh(2, "virtual")
+    assert d.advise(op, *args, **kw).exec_mode == "virtual"
+
+
+def test_serving_record_carries_mesh_exec_mode():
+    from repro.serving import SessionConfig, run_session
+    cfg = SessionConfig(kernel="scale", size=8192, duration_s=0.3,
+                        rate_rps=32.0, num_shards=2, seed=3)
+    _, _, record = run_session(cfg)
+    assert record["mesh_exec_mode"] == "virtual"
+    cfg1 = dataclasses.replace(cfg, num_shards=1)
+    _, _, record1 = run_session(cfg1)
+    assert record1["mesh_exec_mode"] is None
