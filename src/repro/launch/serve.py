@@ -53,10 +53,19 @@ def main():
     traits = decode_traits(full, 128, 32768)
     print(f"[advisor] {DEFAULT_DISPATCHER.advise_traits(traits)}")
 
+    # the model-scale verdict: what fraction of a full-size decode
+    # step the Eq. 23/24 memory-bound ceiling governs, op by op
+    from ..models.advisor_map import model_verdict
+    v = model_verdict(full, args.batch, args.prompt_len + args.gen)
+    print(f"[verdict] {v.model}: memory-bound ops govern "
+          f"{v.memory_bound_time_frac:.1%} of step time, "
+          f"{v.memory_bound_bytes_frac:.1%} of bytes "
+          f"({sum(1 for o in v.ops if o.memory_bound)}/{len(v.ops)} ops)")
+
     executor = LMDecodeExecutor(cfg, max_batch=args.batch,
                                 prompt_len=args.prompt_len,
                                 max_gen=args.gen, dtype=jnp.float32,
-                                seed=args.seed)
+                                seed=args.seed, verdict_cfg=full)
     session = SessionConfig(
         kernel=LM_DECODE, workload=args.workload, rate_rps=args.rate,
         duration_s=args.duration, size=args.gen, seed=args.seed,

@@ -1,0 +1,23 @@
+"""Model layer: real LM architectures over the kernel/dispatch stack.
+
+* :mod:`repro.models.config` — one frozen :class:`ModelConfig` schema
+  covering dense / MoE / MLA / SSM / hybrid / enc-dec families.
+* :mod:`repro.models.lm` — the scan-over-layers forward/prefill/decode
+  implementation every family shares.
+* :mod:`repro.models.engine` — the :class:`DecodeEngine` serving
+  entry point: jitted prefill + greedy decode with registry-dispatched
+  flash-decode attention and a measured prefill/decode phase split.
+* :mod:`repro.models.advisor_map` — per-op Eq. 2 traits for one decode
+  step and the model-scale verdict (what fraction of a step the
+  Eq. 23/24 memory-bound ceiling governs).
+"""
+from .advisor_map import (ModelVerdict, OpVerdict, decode_op_traits,
+                          model_verdict, step_traits, verdict_payload)
+from .config import ModelConfig
+from .engine import DecodeEngine, GenerationResult
+
+__all__ = [
+    "DecodeEngine", "GenerationResult", "ModelConfig", "ModelVerdict",
+    "OpVerdict", "decode_op_traits", "model_verdict", "step_traits",
+    "verdict_payload",
+]

@@ -244,10 +244,22 @@ def attention(p: Params, x, cfg: ModelConfig, *, positions,
             ck = ck.astype(x.dtype)
             cv = cv.astype(x.dtype)
         q = q.reshape(b, sq, cfg.n_kv_heads, group, cfg.head_dim)
-        kv_len = jnp.full((b,), cache_index + sq, jnp.int32)
-        kv_pos = jnp.broadcast_to(jnp.arange(ck.shape[1])[None], (b, ck.shape[1]))
-        qpos = _scalar_pos(positions, cfg)
-        out = _sdpa_dense(q, ck, cv, qpos, kv_pos, causal=True, kv_len=kv_len)
+        if cfg.decode_attention_impl == "registry" and sq == 1:
+            # single-token decode through the registered flash-decode
+            # EngineOp: the dispatcher's memoized §6 Advice routes the
+            # per-layer cache scan (engine='auto' -> vector on this
+            # memory-bound shape), identical numerics to the dense path
+            from ..kernels.attention.ops import decode_attention
+            out = decode_attention(q[:, 0], ck, cv, cache_index + sq,
+                                   engine=cfg.decode_attention_engine)
+            out = out[:, None]
+        else:
+            kv_len = jnp.full((b,), cache_index + sq, jnp.int32)
+            kv_pos = jnp.broadcast_to(jnp.arange(ck.shape[1])[None],
+                                      (b, ck.shape[1]))
+            qpos = _scalar_pos(positions, cfg)
+            out = _sdpa_dense(q, ck, cv, qpos, kv_pos, causal=True,
+                              kv_len=kv_len)
     out = out.reshape(b, sq, cfg.n_heads * cfg.head_dim)
     return out @ p["wo"].astype(x.dtype), cache
 

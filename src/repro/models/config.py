@@ -68,6 +68,17 @@ class ModelConfig:
     frontend_dim: int = 0            # raw embedding dim fed by the stub
     frontend_len: int = 0            # positions consumed by the stub
 
+    # --- decode-attention dispatch ---
+    # "dense": the in-model unchunked softmax path (training parity);
+    # "registry": route single-token decode attention through the
+    # registered flash-decode EngineOp (repro.kernels.attention), so the
+    # dispatcher's §6 Advice picks the engine per layer and the serving
+    # engine exercises the same kernel the paper's evidence tables gate.
+    decode_attention_impl: str = "dense"
+    # engine flag forwarded to the registry op ('auto' defers to the
+    # advisor; 'vector'/'matrix' force a variant for A/B serving runs)
+    decode_attention_engine: str = "auto"
+
     # --- capabilities ---
     sub_quadratic: bool = False      # may run the long_500k cell
     pad_vocab_to: int = 256          # Megatron-style table padding so the

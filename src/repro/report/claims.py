@@ -83,10 +83,10 @@ from ..core.hw import PLATFORMS, TPU_V5E, HardwareSpec
 from ..core.intensity import KernelTraits
 from .records import BenchRecord, RecordSet, ServingRecord
 
-__all__ = ["CLAIMS", "ClaimResult", "MESH_CLAIMS", "SERVING_CLAIMS",
-           "SHARD_CLAIMS", "TOLERANCE", "ceiling_bound", "check_record",
-           "check_records", "check_serving_record", "hw_for",
-           "violations"]
+__all__ = ["CLAIMS", "ClaimResult", "MESH_CLAIMS", "MODEL_CLAIMS",
+           "SERVING_CLAIMS", "SHARD_CLAIMS", "TOLERANCE",
+           "ceiling_bound", "check_record", "check_records",
+           "check_serving_record", "hw_for", "violations"]
 
 #: Claim identifiers, in report order.
 CLAIMS = ("ceiling", "routing", "accuracy", "boundedness")
@@ -103,6 +103,10 @@ SHARD_CLAIMS = ("shard_ceiling", "shard_traffic")
 #: mesh execution (schema 6 records with ``mesh_exec``), in report
 #: order.
 MESH_CLAIMS = ("collective_cost", "mesh_skew")
+
+#: Extra claim for serving sessions that carry a model-scale verdict
+#: (lm records with a ``verdict`` payload).
+MODEL_CLAIMS = ("model_verdict",)
 
 #: Ceiling on the wire bandwidth a measured collective may imply
 #: (wire_bytes / collective seconds).  1 TB/s comfortably exceeds any
@@ -316,6 +320,92 @@ def _mesh_checks(rec: BenchRecord,
     return [collective_cost, mesh_skew]
 
 
+def _verdict_checks(rec: ServingRecord,
+                    hw: HardwareSpec) -> List[ClaimResult]:
+    """The MODEL_CLAIMS check for one lm session's verdict payload.
+
+    The verdict is the per-op Eq. 2 classification of one decode step
+    at model scale (``repro.models.advisor_map``).  The claim
+    re-derives every row and the whole-step accounting:
+
+    * per-op intensity equals flops/bytes, the memory_bound flag
+      matches a fresh Eq. 4 test, a memory-bound op routes to the
+      vector engine (§6), and its recorded ceiling obeys Eq. 23/24 at
+      that op's intensity;
+    * the time and byte fractions each sum to 1 (every op of the step
+      is accounted for — nothing hidden, nothing double-counted);
+    * the per-op times sum to the measured mean decode-step wall time
+      within rounding tolerance (the classification covers the whole
+      measured step, not a convenient subset);
+    * the headline memory-bound fractions equal the sum over
+      memory-bound ops.
+    """
+    v = dict(rec.verdict or {})
+    ops = list(v.get("ops", []))
+    step_ms = float(v.get("step_time_ms", 0.0))
+    b_vec = machine_balance(hw, "vector")
+    problems: List[str] = []
+    if not ops:
+        problems.append("empty ops list")
+
+    tsum = bsum = mb_t = mb_b = t_ms = 0.0
+    for op in ops:
+        name = str(op.get("name", "?"))
+        W, Q = float(op.get("flops", 0.0)), float(op.get("bytes", 0.0))
+        intensity = float(op.get("intensity", -1.0))
+        mb = bool(op.get("memory_bound"))
+        engine = str(op.get("engine", ""))
+        ceil = float(op.get("mxu_ceiling", 0.0))
+        tf, bf = float(op.get("time_frac", 0.0)), \
+            float(op.get("bytes_frac", 0.0))
+        if Q <= 0.0:
+            problems.append(f"{name}: bytes {Q:.4g} <= 0")
+            continue
+        derived_i = W / Q
+        if abs(intensity - derived_i) > 1e-6 * max(derived_i, 1.0):
+            problems.append(f"{name}: intensity {intensity:.4g} != "
+                            f"W/Q {derived_i:.4g}")
+        if mb != (derived_i < b_vec):
+            problems.append(f"{name}: memory_bound={mb} vs Eq. 4 "
+                            f"I={derived_i:.4g} < B_vec={b_vec:.4g}")
+        if mb and engine != "vector":
+            problems.append(f"{name}: memory-bound routed to {engine}")
+        bound = (ceiling_bound(derived_i, hw) if mb else hw.alpha)
+        if not (1.0 - _EPS <= ceil <= bound + _EPS):
+            problems.append(f"{name}: ceiling {ceil:.4g}x outside "
+                            f"[1, {bound:.4g}]")
+        if not (0.0 <= tf <= 1.0 + _EPS and 0.0 <= bf <= 1.0 + _EPS):
+            problems.append(f"{name}: fraction outside [0, 1]")
+        tsum += tf
+        bsum += bf
+        t_ms += float(op.get("time_ms", 0.0))
+        if mb:
+            mb_t += tf
+            mb_b += bf
+
+    if ops:
+        if abs(tsum - 1.0) > 1e-4:
+            problems.append(f"time fractions sum to {tsum:.6g} != 1")
+        if abs(bsum - 1.0) > 1e-4:
+            problems.append(f"byte fractions sum to {bsum:.6g} != 1")
+        # per-op time_ms rows are rounded independently at record time
+        if abs(t_ms - step_ms) > 1e-3 * max(step_ms, 1.0) + 1e-3 * len(ops):
+            problems.append(f"per-op times sum to {t_ms:.4g} ms vs "
+                            f"measured step {step_ms:.4g} ms")
+        head_t = float(v.get("memory_bound_time_frac", -1.0))
+        head_b = float(v.get("memory_bound_bytes_frac", -1.0))
+        if abs(head_t - mb_t) > 1e-4 or abs(head_b - mb_b) > 1e-4:
+            problems.append(f"headline fractions ({head_t:.4g}, "
+                            f"{head_b:.4g}) != per-op sums "
+                            f"({mb_t:.4g}, {mb_b:.4g})")
+
+    detail = (f"{len(ops)} ops, memory-bound time frac {mb_t:.4g}, "
+              f"step {step_ms:.4g} ms"
+              + (f"; problems: {'; '.join(problems[:4])}" if problems
+                 else ""))
+    return [ClaimResult("model_verdict", rec, not problems, detail)]
+
+
 def check_record(rec: BenchRecord,
                  hw: HardwareSpec = TPU_V5E) -> Tuple[ClaimResult, ...]:
     """Verify all four paper claims (Eq. 4, Eq. 17/23/24, §6) for one record.
@@ -352,7 +442,11 @@ def check_serving_record(rec: ServingRecord,
     Returns one :class:`ClaimResult` per entry in
     :data:`SERVING_CLAIMS`, in order, re-deriving the advisor's
     decision from the recorded intensity so the paper's routing story
-    is checked in steady state, not just per call.
+    is checked in steady state, not just per call.  Records carrying a
+    model-scale ``verdict`` payload (lm sessions) additionally get one
+    result per entry in :data:`MODEL_CLAIMS` — the per-op
+    classification re-derived and reconciled against the measured
+    decode-step wall time.
     """
     # Eq. 17/23/24, §6 routing, Eq. 4: the same checks as per-call
     # sweep points, via the shared helper (a record claiming a bigger
@@ -385,6 +479,8 @@ def check_serving_record(rec: ServingRecord,
         f"goodput {rec.goodput_rps:.4g}/s vs attainment "
         f"{rec.slo_attainment:.4g} x throughput {throughput:.4g}/s "
         f"({rec.completed}/{rec.offered} completed)"))
+    if rec.verdict:
+        results.extend(_verdict_checks(rec, hw))
     return tuple(results)
 
 

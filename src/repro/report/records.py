@@ -201,6 +201,14 @@ class ServingRecord:
     # comparability contract too: measured p99 never gates against a
     # modeled one.
     mesh_exec_mode: Optional[str] = None
+    # lm sessions only: the full-size architecture the session speaks
+    # for, the measured prefill/decode phase split, and the per-op
+    # model-scale verdict ({"ops": [...], "memory_bound_time_frac",
+    # ...}) the model_verdict claim re-derives; all None for kernel
+    # sessions
+    model: Optional[str] = None
+    phases: Optional[Mapping[str, Any]] = None
+    verdict: Optional[Mapping[str, Any]] = None
 
     @property
     def point(self) -> Tuple[str, str, str, int, str, int]:
@@ -314,6 +322,17 @@ def _to_serving_record(raw: Mapping[str, Any], path: str) -> ServingRecord:
     opt = {k: raw.get(k) for k in ("queue_p99_ms", "compute_p99_ms",
                                    "throughput_rps", "mean_batch",
                                    "max_wait_ms")}
+    phases = raw.get("phases")
+    if phases is not None and not isinstance(phases, Mapping):
+        raise ValueError(f"{path}: phases must be an object, "
+                         f"got {phases!r}")
+    verdict = raw.get("verdict")
+    if verdict is not None:
+        if not isinstance(verdict, Mapping) or \
+                not isinstance(verdict.get("ops"), list):
+            raise ValueError(f"{path}: verdict must be an object with "
+                             f"an 'ops' list, got {verdict!r}")
+        verdict = dict(verdict)
     return ServingRecord(
         kernel=str(raw["kernel"]),
         engine=str(raw["engine"]),
@@ -346,6 +365,10 @@ def _to_serving_record(raw: Mapping[str, Any], path: str) -> ServingRecord:
         mesh_exec_mode=(str(raw["mesh_exec_mode"])
                         if raw.get("mesh_exec_mode") is not None
                         else None),
+        model=(str(raw["model"])
+               if raw.get("model") is not None else None),
+        phases=(dict(phases) if phases is not None else None),
+        verdict=verdict,
         **{k: (float(v) if v is not None else None)
            for k, v in opt.items()},
     )

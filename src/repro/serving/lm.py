@@ -1,14 +1,22 @@
 """LM decode executor: the serving subsystem's language-model backend.
 
 Serves :data:`~repro.serving.requests.LM_DECODE` requests through the
-same continuous-batching scheduler as the kernel families: a formed
+same continuous-batching scheduler as the kernel families, but the
+compute is now a :class:`~repro.models.engine.DecodeEngine`: a formed
 batch of requests (each asking for ``size`` generated tokens) is padded
-to the executor's fixed ``max_batch`` capacity, prefilled once, and
-greedily decoded step by step against the KV cache — the GEMV-shaped,
+to the engine's fixed ``max_batch`` capacity, prefilled once, and
+greedily decoded step by step through the scan-over-layers block with
+registry-dispatched flash-decode attention per layer — the GEMV-shaped,
 memory-bound regime the paper's framework classifies (decode intensity
 sits far below machine balance, so the advisor routes it to the vector
 engine; the serving records let the claims layer re-check that §6 call
 under real traffic).
+
+The executor also carries the session's *model-scale verdict*
+(``record_extras``): the per-op Eq. 2 classification of one decode step
+for the **full-size** architecture (``verdict_cfg``), plus the measured
+prefill/decode phase split — that is what the ``model_verdict`` claim
+and REPORT.md's "Verdict at model scale" section consume.
 
 Capacity padding matters for the same reason it does in
 ``repro.serving.batcher``: prefill and every decode step compile once
@@ -18,16 +26,15 @@ compiled step instead of retracing.
 from __future__ import annotations
 
 import time
-from typing import List
+from typing import Dict, List, Optional
 
-import jax
 import jax.numpy as jnp
 
 from ..core.dispatch import DEFAULT_DISPATCHER
 from ..core.intensity import KernelTraits
-from ..data.synthetic import make_batch
-from ..models import lm
+from ..models.advisor_map import step_traits, verdict_payload
 from ..models.config import ModelConfig
+from ..models.engine import DecodeEngine
 from .requests import Request
 from .scheduler import BatchExecution
 
@@ -36,70 +43,107 @@ __all__ = ["LMDecodeExecutor", "decode_traits"]
 
 def decode_traits(cfg: ModelConfig, batch: int,
                   cache_len: int) -> KernelTraits:
-    """Eq. 2 traits of one decode step: W ≈ 2·params·B (+ attention
-    reads), Q ≈ params + KV cache bytes — deep in memory-bound country."""
-    head_dim = cfg.head_dim or 0
-    nbytes = (cfg.param_count() * 2
-              + batch * cache_len * cfg.n_layers * cfg.kv_dim * 2 * 2)
-    flops = (2.0 * cfg.param_count() * batch
-             + 4.0 * batch * cfg.n_layers * cache_len * cfg.n_heads
-             * head_dim)
-    return KernelTraits("decode_step", flops, float(nbytes))
+    """Eq. 2 traits of one decode step, summed from the per-op map.
+
+    Delegates to :func:`repro.models.advisor_map.step_traits` so the
+    whole-step numbers the serving record joins on are *by
+    construction* the sum of the per-op rows the ``model_verdict``
+    claim checks — the two can never disagree.
+    """
+    return step_traits(cfg, batch, cache_len)
 
 
 class LMDecodeExecutor:
     """Prefill + batched greedy decode for LM_DECODE request batches.
 
-    One instance owns the model parameters and the jitted
-    prefill/decode-step functions; ``execute`` serves one formed batch
-    (padded to ``max_batch``) and reports measured wall compute.
+    One instance owns a :class:`DecodeEngine` (model parameters, jitted
+    prefill/decode-step); ``execute`` serves one formed batch (padded to
+    ``max_batch``) and reports measured wall compute with its
+    prefill/decode split accumulated across the session.
+
+    ``engine`` forces the flash-decode variant every layer launches
+    ('vector'|'matrix' — the serving A/B lever; 'auto' defers to the
+    advisor).  ``verdict_cfg`` lets a smoke-sized run speak at model
+    scale: execution uses ``cfg`` (e.g. ``reduced(...)``) while the
+    recorded verdict classifies the full architecture.
     """
 
     def __init__(self, cfg: ModelConfig, *, max_batch: int = 4,
                  prompt_len: int = 16, max_gen: int = 16,
-                 dtype=jnp.float32, seed: int = 0):
-        self.cfg = cfg
+                 dtype=jnp.float32, seed: int = 0, engine: str = "auto",
+                 verdict_cfg: Optional[ModelConfig] = None):
+        self.engine = DecodeEngine(cfg, max_batch=max_batch,
+                                   prompt_len=prompt_len, max_gen=max_gen,
+                                   dtype=dtype, seed=seed, engine=engine)
+        self.cfg = self.engine.cfg
+        self.verdict_cfg = verdict_cfg or cfg
         self.max_batch = max_batch
         self.prompt_len = prompt_len
         self.max_gen = max_gen
-        self._dtype = dtype
-        self.params = lm.init_params(cfg, jax.random.key(seed))
-        self._prefill = jax.jit(
-            lambda p, b: lm.prefill(p, cfg, b, dtype=dtype))
-        self._step = jax.jit(
-            lambda p, t, c, i: lm.decode_step(p, cfg, t, c, i, dtype=dtype))
         # one canonical capacity-sized prompt batch: request payloads
         # are synthetic, so every launch reuses the compiled shapes
-        self._batch = make_batch(cfg, max_batch, prompt_len, seed=seed)
+        self._batch = self.engine.make_prompt_batch(seed=seed)
         self._warmed = False
+        self._prefill_s = 0.0
+        self._decode_s = 0.0
+        self._decode_steps = 0
+        self._launches = 0
 
     def advice_for(self, kernel: str, size: int, dtype: str):
         """Memoized Advice for the decode regime (§6: memory-bound →
-        vector engine); signature-compatible with the kernel executor."""
+        vector engine); signature-compatible with the kernel executor.
+        Classifies the *verdict* config so the record's analytic join
+        fields speak at model scale."""
         del kernel, size, dtype
         return DEFAULT_DISPATCHER.advise_traits(
-            decode_traits(self.cfg, self.max_batch,
-                          self.prompt_len + self.max_gen))
-
-    def _decode(self, gen: int) -> None:
-        logits, caches = self._prefill(self.params, self._batch)
-        caches = lm.pad_caches(caches, self.prompt_len + self.max_gen)
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-        for i in range(self.prompt_len, self.prompt_len + gen - 1):
-            logits, caches = self._step(self.params, tok, caches,
-                                        jnp.int32(i))
-            tok = jnp.argmax(logits[:, 0], axis=-1)[:, None]
-        jax.block_until_ready(tok)
+            decode_traits(self.verdict_cfg, self.max_batch,
+                          self.engine.max_len))
 
     def execute(self, batch: List[Request]) -> BatchExecution:
         """Serve one formed batch: prefill + ``max(size)`` decode steps."""
         gen = min(self.max_gen, max(r.size for r in batch))
         if not self._warmed:
             # compile prefill + step outside the timed region
-            self._decode(gen)
+            self.engine.generate(self._batch, gen=gen)
             self._warmed = True
         t0 = time.perf_counter()
-        self._decode(gen)
+        result = self.engine.generate(self._batch, gen=gen)
         compute_s = time.perf_counter() - t0
-        advice = self.advice_for("lm-decode", gen, "float32")
-        return BatchExecution(engine=advice.engine, compute_s=compute_s)
+        self._prefill_s += result.prefill_s
+        self._decode_s += result.decode_s
+        self._decode_steps += result.decode_steps
+        self._launches += 1
+        return BatchExecution(engine=self._engine_label(),
+                              compute_s=compute_s)
+
+    def _engine_label(self) -> str:
+        """The engine batches report: the forced one, else what the
+        advisor resolves 'auto' to for this regime."""
+        if self.engine.engine != "auto":
+            from ..core.dispatch import normalize_engine
+            return normalize_engine(self.engine.engine) or "vector"
+        return self.advice_for("lm-decode", self.max_gen, "float32").engine
+
+    def record_extras(self) -> Dict:
+        """Model/phases/verdict fields merged into the serving record.
+
+        ``phases`` is the measured prefill-vs-decode wall split summed
+        over the session's launches; ``verdict`` is the full-size
+        architecture's per-op Eq. 2 classification with per-op time
+        apportioned over the measured mean decode-step wall time — the
+        payload the ``model_verdict`` claim re-derives.
+        """
+        steps = max(self._decode_steps, 1)
+        per_step_ms = self._decode_s * 1e3 / steps
+        v = self.engine.verdict(self.verdict_cfg)
+        return {
+            "model": self.verdict_cfg.name,
+            "phases": {
+                "prefill_ms": round(self._prefill_s * 1e3, 3),
+                "decode_ms": round(self._decode_s * 1e3, 3),
+                "decode_steps": self._decode_steps,
+                "per_step_ms": round(per_step_ms, 4),
+                "launches": self._launches,
+            },
+            "verdict": verdict_payload(v, per_step_ms),
+        }

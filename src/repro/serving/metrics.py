@@ -129,6 +129,9 @@ def serving_record(summary: ServingSummary, *, kernel: str, engine: str,
                    max_wait_ms: Optional[float] = None,
                    num_shards: int = 1,
                    mesh_exec_mode: Optional[str] = None,
+                   model: Optional[str] = None,
+                   phases: Optional[Dict] = None,
+                   verdict: Optional[Dict] = None,
                    results: Optional[Sequence[RequestResult]] = None,
                    ) -> Dict:
     """One schema-4 serving record: summary + analytic join fields.
@@ -146,9 +149,18 @@ def serving_record(summary: ServingSummary, *, kernel: str, engine: str,
     measured shard_map wall time on real devices — also part of the
     comparability contract (a measured p99 must not gate against a
     modeled one).
+
+    Model-backed sessions (``workload='lm'``) additionally carry
+    ``model`` (the full-size architecture name), ``phases`` (the
+    measured prefill/decode wall split), and ``verdict`` (the per-op
+    model-scale classification the ``model_verdict`` claim checks);
+    all three are None for kernel sessions.
     """
     del results  # per-request samples stay in-process; records are sums
     return {
+        **({"model": str(model)} if model is not None else {}),
+        **({"phases": dict(phases)} if phases is not None else {}),
+        **({"verdict": dict(verdict)} if verdict is not None else {}),
         "num_shards": int(num_shards),
         "mesh_exec_mode": (str(mesh_exec_mode)
                            if mesh_exec_mode is not None else None),

@@ -78,6 +78,11 @@ def run_session(cfg: SessionConfig, executor=None,
     engines = {r.engine for r in log.results} or \
         {forced if forced is not None else advice.engine}
     engine = engines.pop() if len(engines) == 1 else "mixed"
+    # model-backed executors (LMDecodeExecutor) contribute the model
+    # name, the prefill/decode phase split, and the per-op model-scale
+    # verdict the model_verdict claim checks; kernel executors don't
+    extras = (executor.record_extras()
+              if hasattr(executor, "record_extras") else {})
     record = serving_record(
         summary, kernel=cfg.kernel, engine=engine,
         engine_auto=advice.engine, workload=cfg.workload,
@@ -89,5 +94,7 @@ def run_session(cfg: SessionConfig, executor=None,
         max_wait_ms=cfg.policy.max_wait_s * 1e3,
         num_shards=cfg.num_shards,
         mesh_exec_mode=(("mesh" if cfg.real_mesh else "virtual")
-                        if cfg.num_shards > 1 else None))
+                        if cfg.num_shards > 1 else None),
+        model=extras.get("model"), phases=extras.get("phases"),
+        verdict=extras.get("verdict"))
     return log, summary, record

@@ -87,6 +87,64 @@ def test_decode_matches_forward(small_setup, name):
                                rtol=2e-2, atol=2e-2)
 
 
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_registry_decode_matches_dense(small_setup, name):
+    """Registry-dispatched flash-decode attention == the in-model dense
+    path, layer by layer through a real teacher-forced decode.
+
+    This is the serving engine's default configuration
+    (``decode_attention_impl='registry'``): every layer's cache scan
+    goes through the registered EngineOp and the dispatcher's §6
+    Advice, and must be numerically interchangeable with the dense
+    softmax path the training graph uses.
+    """
+    cfg, params = small_setup(name)
+    if cfg.is_attention_free:
+        pytest.skip("attention-free family: no decode-attention dispatch")
+    if cfg.use_mla:
+        pytest.skip("MLA decodes via the absorbed latent path, not the "
+                    "registry op")
+    b, s = 1, 6
+    batch = make_batch(cfg, b, s, seed=5)
+    variants = {}
+    for impl in ("dense", "registry"):
+        c = dataclasses.replace(cfg, decode_attention_impl=impl)
+        caches = lm.init_caches(c, b, max_len=8, dtype=jnp.float32)
+        outs = []
+        for t in range(s):
+            lg, caches = lm.decode_step(params, c,
+                                        batch["tokens"][:, t:t + 1],
+                                        caches, jnp.int32(t),
+                                        dtype=jnp.float32)
+            outs.append(lg[:, 0])
+        variants[impl] = np.asarray(jnp.stack(outs, axis=1))
+    np.testing.assert_allclose(variants["registry"], variants["dense"],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_registry_decode_forced_engines_agree():
+    """Forcing the matrix variant changes the compute engine only --
+    identical numerics through the same KV-cache memory path."""
+    cfg = reduced(get_arch("deepseek-7b"))
+    params = lm.init_params(cfg, jax.random.key(0))
+    batch = make_batch(cfg, 1, 4, seed=6)
+    outs = {}
+    for engine in ("vector", "matrix"):
+        c = dataclasses.replace(cfg, decode_attention_impl="registry",
+                                decode_attention_engine=engine)
+        caches = lm.init_caches(c, 1, max_len=8, dtype=jnp.float32)
+        per_step = []
+        for t in range(4):
+            lg, caches = lm.decode_step(params, c,
+                                        batch["tokens"][:, t:t + 1],
+                                        caches, jnp.int32(t),
+                                        dtype=jnp.float32)
+            per_step.append(lg[:, 0])
+        outs[engine] = np.asarray(jnp.stack(per_step, axis=1))
+    np.testing.assert_allclose(outs["matrix"], outs["vector"],
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_encdec_decode():
     """Prefill (1 token, fills cross KV) then teacher-forced decode matches
     the full forward pass."""

@@ -46,7 +46,7 @@ def test_workflow_is_structurally_valid(name):
 def test_ci_matrix_split():
     wf = _load("ci.yml")
     jobs = wf["jobs"]
-    assert set(jobs) == {"lint-unit", "mesh-smoke", "slow"}
+    assert set(jobs) == {"lint-unit", "mesh-smoke", "lm-smoke", "slow"}
 
     lint = jobs["lint-unit"]
     matrix = lint["strategy"]["matrix"]["python-version"]
@@ -117,6 +117,38 @@ def test_ci_mesh_smoke_job():
     # jobs never double-gate (or double-miss) a mesh width
     lint_runs = _run_text(_load("ci.yml")["jobs"]["lint-unit"])
     assert "--kind bench --mesh 1" in lint_runs
+
+
+def test_ci_lm_smoke_job():
+    """The whole-model decode smoke: a bare-default lm serve session
+    gated (incl. the model_verdict claim) against the committed
+    schema-4 baseline.  Bare defaults are load-bearing: compare.py
+    refuses joined keys whose rate/duration/SLO/batching knobs differ
+    from the baseline's, so the serve command must carry no knobs."""
+    job = _load("ci.yml")["jobs"]["lm-smoke"]
+    runs = _run_text(job)
+    assert "benchmarks.run serve --workload lm --config deepseek_7b" in runs
+    assert "--out runs-ci-lm" in runs
+    assert "benchmarks.compare runs runs-ci-lm" in runs
+    assert "--kernels lm-deepseek-7b" in runs and "--kind serving" in runs
+    # no traffic/batching knobs on the serve command (defaults must
+    # match the committed baseline exactly)
+    serve_line = next(line for line in runs.splitlines()
+                      if "benchmarks.run serve --workload lm" in line)
+    for knob in ("--rate", "--duration", "--max-batch", "--slo-ms",
+                 "--seed", "--prompt-len", "--gen"):
+        assert knob not in serve_line
+    uploads = [s for s in job["steps"]
+               if "upload-artifact" in s.get("uses", "")]
+    assert uploads and "runs-ci-lm" in uploads[0]["with"]["path"]
+
+
+def test_ci_model_tier_named_step():
+    """The decode-engine + verdict test modules are a named fast-lane
+    step (failures findable from the job summary)."""
+    runs = _run_text(_load("ci.yml")["jobs"]["lint-unit"])
+    assert "tests/test_model_engine.py" in runs
+    assert "tests/test_model_verdict.py" in runs
 
 
 def test_nightly_covers_committed_mesh_widths():

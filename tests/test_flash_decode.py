@@ -16,6 +16,8 @@ def _hypothesis_stub():
     silently-uncollected coverage."""
     pytest.skip("hypothesis not installed (pip install -e .[dev])")
 
+from repro.core.dispatch import DEFAULT_DISPATCHER
+from repro.kernels import registry
 from repro.kernels.attention.ops import decode_attention
 from repro.kernels.attention.ref import decode_attention_ref
 
@@ -71,3 +73,56 @@ def test_flash_decode_is_convex_combination():
     vmin = np.asarray(v).min(axis=(0, 1))
     o = np.asarray(out)[0, 0]
     assert (o <= vmax + 1e-4).all() and (o >= vmin - 1e-4).all()
+
+
+# --------------------------------------------------------------------------
+# registry-dispatched path (what the model decode engine calls)
+# --------------------------------------------------------------------------
+
+def test_registry_dispatch_matches_ref():
+    """registry.get('attention') with engine='auto' == the oracle.
+
+    This is the exact call path ``repro.models.attention`` takes when
+    ``decode_attention_impl='registry'``: the EngineOp's __call__ routes
+    through the default dispatcher's memoized §6 Advice.
+    """
+    op = registry.get("attention")
+    q, k, v = _mk(1, 256, 2, 4, 64, jnp.float32, 11)
+    got = op(q, k, v, 200)
+    want = decode_attention_ref(q, k, v, 200)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("engine", ["vector", "matrix"])
+def test_forced_engines_match_ref_through_registry(engine):
+    """Both forced variants reproduce the oracle (same memory path)."""
+    op = registry.get("attention")
+    q, k, v = _mk(2, 128, 2, 2, 32, jnp.float32, 13)
+    got = op(q, k, v, 100, engine=engine)
+    want = decode_attention_ref(q, k, v, 100)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_advice_routes_decode_attention_to_vector():
+    """§6: the GEMV-shaped cache scan is memory-bound -> vector engine."""
+    op = registry.get("attention")
+    q, k, v = _mk(1, 512, 2, 4, 64, jnp.float32)
+    advice = DEFAULT_DISPATCHER.advise(op, q, k, v, 512)
+    assert advice.memory_bound
+    assert advice.engine == "vector"
+    # Eq. 23 caps any matrix-engine hope below 2x on every platform
+    assert 1.0 <= advice.max_speedup_matrix < 2.0
+
+
+def test_registry_dispatch_model_scale_cache_lengths():
+    """Serving cache lengths aren't block-aligned (e.g. prompt 8 + gen 4
+    = 12); the clamped block must still mask correctly."""
+    op = registry.get("attention")
+    for s, kv_len in ((12, 9), (24, 24), (56, 1)):
+        q, k, v = _mk(2, s, 1, 2, 16, jnp.float32, seed=s)
+        got = op(q, k, v, kv_len)
+        want = decode_attention_ref(q, k, v, kv_len)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5, err_msg=f"S={s}")

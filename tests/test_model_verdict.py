@@ -1,0 +1,216 @@
+"""Model-scale verdict tier (ISSUE 7, satellite b).
+
+Property-checks ``repro.models.advisor_map`` across every registered
+architecture: per-op classification must be consistent with the op's
+own declared Eq. 2 traits (I = W/Q, Eq. 4 boundedness, §6 routing,
+Eq. 17/23/24 ceiling), the time/byte fractions must account for the
+whole step, and the whole-step traits must equal the per-op sum — the
+invariants the ``model_verdict`` claim later re-derives from records.
+
+Then the serialization contract: a schema-4 lm record carrying the
+verdict payload round-trips through ``repro.report.records`` and
+passes ``check_serving_record`` including the ``model_verdict`` claim;
+and REPORT.md's "Verdict at model scale" section re-renders
+byte-identically against the golden file.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import pytest
+
+from repro.configs import ARCHS, get_arch
+from repro.core.balance import machine_balance
+from repro.core.dispatch import DEFAULT_DISPATCHER
+from repro.models import model_verdict, step_traits, verdict_payload
+from repro.report.claims import (MODEL_CLAIMS, SERVING_CLAIMS,
+                                 ceiling_bound, check_serving_record,
+                                 hw_for)
+from repro.report.records import load_file
+from repro.report.render import _verdict_section
+
+HW = DEFAULT_DISPATCHER.hw
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "verdict_section.md")
+
+#: (batch, cache_len, dtype_bytes) decode-step shapes the properties
+#: are checked at: single-request, serving-default, and long-context
+#: large-batch.
+SHAPES = ((1, 16, 2), (4, 128, 4), (64, 4096, 2))
+
+
+# --------------------------------------------------------------------------
+# per-op classification properties
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", SHAPES, ids=["b1s16", "b4s128", "b64s4k"])
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_op_classification_consistent_with_traits(name, shape):
+    """Every op's verdict row re-derives from its own W/Q traits."""
+    b, s, e = shape
+    v = model_verdict(get_arch(name), b, s, dtype_bytes=e)
+    b_vec = machine_balance(HW, "vector")
+    assert v.ops, name
+    for op in v.ops:
+        assert op.bytes > 0.0, op.name
+        assert op.intensity == pytest.approx(op.flops / op.bytes,
+                                             rel=1e-9), op.name
+        assert op.memory_bound == (op.intensity < b_vec), op.name
+        if op.memory_bound:
+            # §6: the advisor must route memory-bound ops to the VPU
+            assert op.engine == "vector", op.name
+        bound = (ceiling_bound(op.intensity, HW) if op.memory_bound
+                 else HW.alpha)
+        assert 1.0 - 1e-9 <= op.mxu_ceiling <= bound + 1e-9, op.name
+        assert 0.0 <= op.time_frac <= 1.0 and 0.0 <= op.bytes_frac <= 1.0
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=["b1s16", "b4s128", "b64s4k"])
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_fractions_account_for_the_whole_step(name, shape):
+    """Time/byte fractions sum to 1; headlines equal the bound-op sums;
+    whole-step traits equal the per-op totals."""
+    b, s, e = shape
+    cfg = get_arch(name)
+    v = model_verdict(cfg, b, s, dtype_bytes=e)
+    assert sum(o.time_frac for o in v.ops) == pytest.approx(1.0, abs=1e-9)
+    assert sum(o.bytes_frac for o in v.ops) == pytest.approx(1.0, abs=1e-9)
+    assert v.memory_bound_time_frac == pytest.approx(
+        sum(o.time_frac for o in v.ops if o.memory_bound), abs=1e-12)
+    assert v.memory_bound_bytes_frac == pytest.approx(
+        sum(o.bytes_frac for o in v.ops if o.memory_bound), abs=1e-12)
+    t = step_traits(cfg, b, s, dtype_bytes=e)
+    assert t.work_flops == pytest.approx(sum(o.flops for o in v.ops))
+    assert t.traffic_bytes == pytest.approx(sum(o.bytes for o in v.ops))
+
+
+def test_payload_rounding_survives_claim_tolerance():
+    """The rounded JSON payload still sums within the claim's 1e-4."""
+    v = model_verdict(get_arch("qwen3-moe-235b-a22b"), 4, 128,
+                      dtype_bytes=4)
+    payload = verdict_payload(v, step_time_ms=7.25)
+    assert sum(o["time_frac"] for o in payload["ops"]) == pytest.approx(
+        1.0, abs=1e-4)
+    assert sum(o["bytes_frac"] for o in payload["ops"]) == pytest.approx(
+        1.0, abs=1e-4)
+    assert sum(o["time_ms"] for o in payload["ops"]) == pytest.approx(
+        payload["step_time_ms"], abs=1e-3 * len(payload["ops"]) + 1e-3)
+
+
+# --------------------------------------------------------------------------
+# schema-4 record round-trip + claims
+# --------------------------------------------------------------------------
+
+def _lm_record(cfg_name: str, step_ms: float = 5.0) -> dict:
+    """A fully consistent schema-4 lm session record (fixed timings)."""
+    cfg = get_arch(cfg_name)
+    t = step_traits(cfg, 4, 128, dtype_bytes=4)
+    adv = DEFAULT_DISPATCHER.advise_traits(t)
+    return {
+        "kernel": f"lm-{cfg.name}", "engine": "vector",
+        "engine_auto": adv.engine, "workload": "lm", "rate_rps": 8.0,
+        "duration_s": 1.0, "size": 4, "dtype": "float32", "seed": 0,
+        "offered": 10, "completed": 10, "p50_ms": 10.0, "p95_ms": 20.0,
+        "p99_ms": 30.0, "queue_p50_ms": 1.0, "compute_p50_ms": 9.0,
+        "goodput_rps": 10.0, "slo_ms": 30000.0, "slo_attainment": 1.0,
+        "intensity": t.intensity, "memory_bound": adv.memory_bound,
+        "mxu_ceiling": adv.max_speedup_matrix, "max_batch": 4,
+        "model": cfg.name,
+        "phases": {"prefill_ms": 12.5, "decode_ms": 10 * step_ms,
+                   "decode_steps": 10, "per_step_ms": step_ms,
+                   "launches": 3},
+        "verdict": verdict_payload(
+            model_verdict(cfg, 4, 128, dtype_bytes=4), step_ms),
+    }
+
+
+def _write_recset(tmp_path, cfg_name: str):
+    rec = _lm_record(cfg_name)
+    path = tmp_path / f"BENCH_serve_{rec['kernel']}.json"
+    path.write_text(json.dumps({
+        "schema": 4, "kind": "serving", "kernel": rec["kernel"],
+        "env": {"hw_model": HW.name, "interpret": True},
+        "records": [rec]}, indent=1))
+    return rec, load_file(str(path))
+
+
+@pytest.mark.parametrize("name", ["deepseek-7b", "qwen3-moe-235b-a22b",
+                                  "mamba2-780m"])
+def test_lm_record_roundtrip_and_model_verdict_claim(tmp_path, name):
+    raw, rs = _write_recset(tmp_path, name)
+    assert rs.kind == "serving" and len(rs.records) == 1
+    rec = rs.records[0]
+    assert rec.model == name
+    assert dict(rec.phases) == raw["phases"]
+    assert json.loads(json.dumps(dict(rec.verdict))) == raw["verdict"]
+    results = check_serving_record(rec, hw_for(rs))
+    assert tuple(r.claim for r in results) == SERVING_CLAIMS + MODEL_CLAIMS
+    failed = [f"{r.claim}: {r.detail}" for r in results if not r.passed]
+    assert not failed, failed
+
+
+def test_tampered_verdict_fails_the_claim(tmp_path):
+    """A hand-edited op classification cannot pass model_verdict."""
+    rec = _lm_record("deepseek-7b")
+    rec["verdict"]["ops"][0]["memory_bound"] = \
+        not rec["verdict"]["ops"][0]["memory_bound"]
+    path = tmp_path / "BENCH_serve_lm-deepseek-7b.json"
+    path.write_text(json.dumps({"schema": 4, "kind": "serving",
+                                "kernel": rec["kernel"],
+                                "env": {"hw_model": HW.name},
+                                "records": [rec]}))
+    rs = load_file(str(path))
+    by_claim = {r.claim: r for r in check_serving_record(rs.records[0],
+                                                         hw_for(rs))}
+    assert not by_claim["model_verdict"].passed
+
+
+def test_verdict_requires_ops_list(tmp_path):
+    rec = _lm_record("deepseek-7b")
+    rec["verdict"] = {"step_time_ms": 5.0}        # no 'ops'
+    path = tmp_path / "BENCH_serve_lm-deepseek-7b.json"
+    path.write_text(json.dumps({"schema": 4, "kind": "serving",
+                                "kernel": rec["kernel"], "env": {},
+                                "records": [rec]}))
+    with pytest.raises(ValueError, match="ops"):
+        load_file(str(path))
+
+
+# --------------------------------------------------------------------------
+# golden REPORT.md section
+# --------------------------------------------------------------------------
+
+GOLDEN_MODELS = ("deepseek-7b", "qwen3-moe-235b-a22b", "mamba2-780m")
+
+
+def _render_golden(tmp_path) -> str:
+    sets = [_write_recset(tmp_path, n)[1] for n in GOLDEN_MODELS]
+    return "\n".join(_verdict_section(sets)) + "\n"
+
+
+def test_verdict_section_matches_golden(tmp_path):
+    """The REPORT.md verdict section re-renders byte-identically.
+
+    Regenerate with
+    ``python -m tests.test_model_verdict`` after an intentional change
+    to the verdict analytics or the section's wording.
+    """
+    text = _render_golden(tmp_path)
+    with open(GOLDEN, encoding="utf-8") as f:
+        assert text == f.read()
+    for name in GOLDEN_MODELS:
+        assert name in text
+    # deterministic re-render: same records, same bytes
+    assert text == _render_golden(tmp_path)
+
+
+if __name__ == "__main__":               # regenerate the golden file
+    import pathlib
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        out = _render_golden(pathlib.Path(td))
+    os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+    with open(GOLDEN, "w", encoding="utf-8") as f:
+        f.write(out)
+    print(f"wrote {GOLDEN} ({len(out)} bytes)")
