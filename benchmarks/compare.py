@@ -19,10 +19,14 @@ when
 * any candidate record violates a paper claim (Eq. 23/24 ceiling,
   §6 routing, oracle accuracy, Eq. 4 boundedness — §6-under-load,
   percentile and goodput consistency for serving records),
+* a joined pair of **chaos** serving sessions (both sides carrying an
+  ``events`` block from ``serve --chaos``) drops its availability
+  under failure by more than the same threshold,
 * a joined serving session pair disagrees on its load knobs
-  (rate/duration/SLO/seed/mesh width — sessions under different
-  offered load or sharding are not comparable, so drifted defaults
-  fail loudly instead of gating noise), or
+  (rate/duration/SLO/seed/mesh width/chaos spec — sessions under
+  different offered load, sharding, or injected adversary are not
+  comparable, so drifted defaults fail loudly instead of gating
+  noise), or
 * a baseline point disappears from the candidate set (lost coverage is
   a regression too — including a lost mesh width, since the shard
   count is part of the bench join key).
@@ -34,10 +38,11 @@ joins the width it was requested at; serving sessions join on
 (kernel, engine, workload, size, dtype).  ``--kind``
 restricts the gate to one record kind (``bench``/``serving``; default
 ``all``) so CI can gate a fast kernel sweep and a serve smoke run
-against different candidate directories; ``--mesh N`` restricts the
-bench side to points sharded N ways (``--mesh 1`` = the single-device
-sweep only) so a partial candidate sweep is not blamed for the mesh
-widths it never ran — the default ``all`` demands full mesh coverage.
+against different candidate directories; ``--mesh N`` restricts both
+bench points and serving sessions to the width they ran at
+(``--mesh 1`` = the single-device sweep only) so a partial candidate
+sweep is not blamed for the mesh widths it never ran — the default
+``all`` demands full mesh coverage.
 ``--kernels`` restricts both sides to a comma-separated subset.
 Speed-ups and new points are reported but never fail the gate.
 
@@ -123,9 +128,14 @@ def _index(recsets: Iterable[RecordSet], which: str,
             # filter on the requested mesh width, matching the join
             # key: a clamped sweep (fewer effective shards than the
             # mesh asked for) still belongs to the width it ran under
-            if mesh is not None and which == "bench" \
-                    and rec.mesh_devices != mesh:
-                continue
+            # (serving sessions filter on their own width field — a
+            # mesh-2 chaos baseline must not be demanded of a --mesh 1
+            # serve smoke, nor vice versa)
+            if mesh is not None:
+                width = (rec.mesh_devices if which == "bench"
+                         else (rec.num_shards or 1))
+                if width != mesh:
+                    continue
             out[rec.point] = rec
     return out
 
@@ -227,11 +237,16 @@ def gate(baseline_dir: str, candidate_dir: str, threshold: float = 0.25,
                              failures)
 
     if kind in ("all", "serving"):
-        base = _index(base_sets, "serving", wanted)
-        cand = _index(cand_sets, "serving", wanted)
+        base = _index(base_sets, "serving", wanted, mesh)
+        cand = _index(cand_sets, "serving", wanted, mesh)
         empty = empty and not base
 
         def _knob(rec, field):
+            if field == "chaos_spec":
+                # the injected fault/resize schedule is a load knob
+                # too: a chaos session only gates against a baseline
+                # that suffered the same adversary
+                return (rec.events or {}).get("spec")
             value = getattr(rec, field)
             if field == "num_shards":
                 return value or 1  # legacy records: None = unsharded
@@ -247,7 +262,7 @@ def gate(baseline_dir: str, candidate_dir: str, threshold: float = 0.25,
                 f"{f}={_knob(base[key], f)} vs {_knob(cand[key], f)}"
                 for f in ("rate_rps", "duration_s", "slo_ms", "seed",
                           "max_batch", "max_wait_ms", "num_shards",
-                          "mesh_exec_mode")
+                          "mesh_exec_mode", "chaos_spec")
                 if _knob(base[key], f) != _knob(cand[key], f)]
             if mismatched:
                 failures.append(Failure(
@@ -262,6 +277,17 @@ def gate(baseline_dir: str, candidate_dir: str, threshold: float = 0.25,
                          cand[key].goodput_rps, "goodput_rps", "rps",
                          threshold, "goodput", failures,
                          lower_is_better=False)
+            b_ev, c_ev = base[key].events, cand[key].events
+            if b_ev and c_ev:
+                # both sides are chaos sessions under the same spec:
+                # availability under failure is a first-class serving
+                # metric — a recovery-path regression that starts
+                # dropping requests fails here even before the
+                # elastic_integrity claim goes red
+                _gate_metric(key, float(b_ev.get("availability", 0.0)),
+                             float(c_ev.get("availability", 0.0)),
+                             "availability", "", threshold, "goodput",
+                             failures, lower_is_better=False)
 
     if empty:
         # an over-narrow --kernels/--kind filter must not pass vacuously

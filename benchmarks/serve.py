@@ -13,6 +13,18 @@ Each kernel's sessions land in ``<out>/BENCH_serve_<kernel>.json``
 ``benchmarks/compare.py --kind serving`` p99/goodput gate; a summary
 table prints per session.
 
+``--chaos SPEC`` routes each kernel session through the elastic
+runtime (:class:`~repro.serving.elastic.ElasticSession`): the seeded
+spec (``fail@T[:SHARD]`` / ``resize@T:WIDTH`` tokens) injects shard
+failures and mesh resizes mid-session, the session re-dispatches and
+re-shards without dropping or corrupting a request, and the record
+grows an ``events`` block (failure/resize log, availability, chaos
+vs. fault-free checksums) that the ``elastic_integrity`` claim and the
+``compare.py`` availability gate verify.  Chaos needs the replayable
+virtual clock and an open-loop workload, so it composes with
+``--mesh`` but refuses ``--real``, ``--workload closed``, and
+``--workload lm``.
+
 ``--workload lm`` switches from kernel families to whole-model decode:
 each ``--config`` architecture (smoke-sized for execution, full-sized
 for the analytics) is served through the scan-over-layers
@@ -80,6 +92,12 @@ def _parse(argv: Optional[List[str]]) -> argparse.Namespace:
                    help="data-axis mesh width: every launch splits into "
                         "this many shards and batches are charged the "
                         "shard-parallel compute time (default 1)")
+    p.add_argument("--chaos", default=None, metavar="SPEC",
+                   help="inject failures/resizes via the elastic "
+                        "runtime: comma-separated 'fail@T[:SHARD]' and "
+                        "'resize@T:WIDTH' tokens (virtual seconds); "
+                        "records grow an events block the "
+                        "elastic_integrity claim verifies")
     p.add_argument("--real", action="store_true",
                    help="execute sharded batches on a real N-device "
                         "host mesh (shard_map + measured wall time) "
@@ -186,6 +204,28 @@ def main(argv: Optional[List[str]] = None) -> int:
         args.max_batch = 4 if lm else 8
     if args.slo_ms is None:
         args.slo_ms = 30000.0 if lm else 50.0
+    injector = None
+    if args.chaos:
+        # validate the adversary up front: the elastic runtime needs a
+        # replayable clock (virtual mesh) and replayable arrivals
+        # (open-loop traffic) so the fault-free checksum leg is exact
+        if lm:
+            raise SystemExit("--chaos is not supported for --workload "
+                             "lm (kernel sessions only)")
+        if args.real:
+            raise SystemExit("--chaos requires the virtual clock: drop "
+                             "--real (a measured mesh wall is not "
+                             "bit-replayable against the fault-free leg)")
+        if args.workload == "closed":
+            raise SystemExit("--chaos requires an open-loop workload "
+                             "(poisson/bursty/trace): closed-loop "
+                             "arrivals react to completions and cannot "
+                             "replay fault-free")
+        from repro.serving import ChaosInjector
+        try:
+            injector = ChaosInjector(args.chaos)
+        except ValueError as err:
+            raise SystemExit(f"bad --chaos spec: {err}")
     if lm:
         return _serve_lm(args)
     if args.workload == "trace" and not args.trace:
@@ -249,7 +289,12 @@ def main(argv: Optional[List[str]] = None) -> int:
                 size=args.size, dtype=args.dtype, seed=args.seed,
                 policy=policy, slo=slo, trace_path=args.trace,
                 num_shards=args.mesh, real_mesh=args.real)
-            _, summary, record = run_session(cfg, source=source)
+            if injector is not None:
+                from repro.serving import ElasticSession
+                session = ElasticSession(cfg, injector=injector)
+                _, summary, record = session.run()
+            else:
+                _, summary, record = run_session(cfg, source=source)
             records.append(record)
             print(f"{kernel},{record['engine']},{args.workload},"
                   f"{summary.completed},{summary.p50_ms:.3f},"

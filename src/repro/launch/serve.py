@@ -10,6 +10,10 @@ attainment printed at the end.
 
 ``--reduced`` (default) serves the smoke-size config;
 ``--no-reduced`` serves the full-size architecture.
+
+This launcher serves LM decode only.  For kernel-family sessions under
+injected shard failures and mesh resizes (the elastic runtime — see
+docs/runtime.md), use ``python -m benchmarks.run serve --chaos SPEC``.
 """
 import argparse
 import time

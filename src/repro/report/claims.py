@@ -83,8 +83,8 @@ from ..core.hw import PLATFORMS, TPU_V5E, HardwareSpec
 from ..core.intensity import KernelTraits
 from .records import BenchRecord, RecordSet, ServingRecord
 
-__all__ = ["CLAIMS", "ClaimResult", "MESH_CLAIMS", "MODEL_CLAIMS",
-           "SERVING_CLAIMS", "SHARD_CLAIMS", "TOLERANCE",
+__all__ = ["CLAIMS", "ClaimResult", "ELASTIC_CLAIMS", "MESH_CLAIMS",
+           "MODEL_CLAIMS", "SERVING_CLAIMS", "SHARD_CLAIMS", "TOLERANCE",
            "ceiling_bound", "check_record", "check_records",
            "check_serving_record", "hw_for", "violations"]
 
@@ -107,6 +107,11 @@ MESH_CLAIMS = ("collective_cost", "mesh_skew")
 #: Extra claim for serving sessions that carry a model-scale verdict
 #: (lm records with a ``verdict`` payload).
 MODEL_CLAIMS = ("model_verdict",)
+
+#: Extra claim for chaos serving sessions (ElasticSession records with
+#: an ``events`` payload): failures and resizes moved latency, never
+#: results, and never past the availability/p99 floors.
+ELASTIC_CLAIMS = ("elastic_integrity",)
 
 #: Ceiling on the wire bandwidth a measured collective may imply
 #: (wire_bytes / collective seconds).  1 TB/s comfortably exceeds any
@@ -406,6 +411,116 @@ def _verdict_checks(rec: ServingRecord,
     return [ClaimResult("model_verdict", rec, not problems, detail)]
 
 
+def _elastic_checks(rec: ServingRecord,
+                    hw: HardwareSpec) -> List[ClaimResult]:
+    """The ELASTIC_CLAIMS check for one chaos session's events payload.
+
+    The integrity contract of ``repro.serving.elastic``: an injected
+    shard failure or mesh resize may cost latency, never answers.
+    Verified from the record alone:
+
+    * the chaos session's fingerprint checksum equals the fault-free
+      replay's **exactly** (bit-exact re-dispatch and re-shard — the
+      same float64 or the claim is red);
+    * completions match the fault-free replay and the recorded
+      availability is both consistent with completed/offered and at or
+      above the recorded target;
+    * the chaos p99 stays within ``p99_bound x fault-free p99 +
+      p99_slack_ms`` (failure recovery is charged to the clock, so
+      degradation is expected — unbounded degradation is not);
+    * every log entry is sane: known kind, non-negative time, every
+      *applied* failure re-dispatched bit-exactly with non-negative
+      recovery latency, every resize between valid widths with
+      ``dp_rescale`` = to/from and a bit-exact re-shard
+      (``reshard_exact``), and the failure/resize counters match the
+      log.
+
+    The ceiling/routing/boundedness claims run on the same record
+    independently, so "the Eq. 23/24 story holds across events" is
+    checked by construction: the record's analytic fields come from
+    the same memoized Advice at every width.
+    """
+    del hw  # the analytic claims run separately on the same record
+    ev = dict(rec.events or {})
+    ff = dict(ev.get("fault_free", {}))
+    problems: List[str] = []
+
+    checksum = ev.get("checksum")
+    ff_checksum = ff.get("checksum")
+    if checksum is None or ff_checksum is None:
+        problems.append("missing checksum")
+    elif float(checksum) != float(ff_checksum):
+        problems.append(f"checksum {checksum!r} != fault-free "
+                        f"{ff_checksum!r}")
+
+    if int(ff.get("completed", -1)) != rec.completed or \
+            int(ff.get("offered", -1)) != rec.offered:
+        problems.append(
+            f"completions {rec.completed}/{rec.offered} != fault-free "
+            f"{ff.get('completed')}/{ff.get('offered')}")
+
+    avail = float(ev.get("availability", -1.0))
+    target = float(ev.get("availability_target", -1.0))
+    derived = (rec.completed / rec.offered if rec.offered > 0 else 1.0)
+    if not 0.0 < target <= 1.0:
+        problems.append(f"bad availability target {target!r}")
+    if abs(avail - derived) > 1e-6 + _EPS:
+        problems.append(f"availability {avail:.6g} != "
+                        f"completed/offered {derived:.6g}")
+    if avail < target - _EPS:
+        problems.append(f"availability {avail:.6g} < target {target:.6g}")
+
+    bound = float(ev.get("p99_bound", 0.0))
+    slack = float(ev.get("p99_slack_ms", 0.0))
+    ff_p99 = float(ff.get("p99_ms", 0.0))
+    limit = bound * ff_p99 + slack
+    if bound <= 0.0:
+        problems.append(f"bad p99 bound {bound!r}")
+    elif rec.p99_ms > limit + _EPS:
+        problems.append(f"p99 {rec.p99_ms:.4g} ms > bound "
+                        f"{bound:g} x {ff_p99:.4g} + {slack:g} ms")
+
+    applied_fails = applied_resizes = 0
+    for i, entry in enumerate(ev.get("log", [])):
+        kind = str(entry.get("kind", "?"))
+        at_s = float(entry.get("at_s", -1.0))
+        if kind not in ("fail", "resize") or at_s < 0.0:
+            problems.append(f"log[{i}]: bad entry kind={kind} at={at_s}")
+            continue
+        if entry.get("skipped"):
+            continue
+        if kind == "fail":
+            applied_fails += 1
+            if not entry.get("redispatch_exact"):
+                problems.append(f"log[{i}]: failure re-dispatch not "
+                                f"bit-exact")
+            if float(entry.get("recovery_ms", -1.0)) < 0.0:
+                problems.append(f"log[{i}]: negative recovery latency")
+        else:
+            applied_resizes += 1
+            frm, to = int(entry.get("from", 0)), int(entry.get("to", 0))
+            rescale = float(entry.get("dp_rescale", 0.0))
+            if frm < 1 or to < 1:
+                problems.append(f"log[{i}]: resize widths {frm}->{to}")
+            elif abs(rescale - to / frm) > _EPS:
+                problems.append(f"log[{i}]: dp_rescale {rescale:.4g} "
+                                f"!= {to}/{frm}")
+            if not entry.get("reshard_exact"):
+                problems.append(f"log[{i}]: re-shard not bit-exact")
+    if applied_fails != int(ev.get("failures", -1)) or \
+            applied_resizes != int(ev.get("resizes", -1)):
+        problems.append(
+            f"counters ({ev.get('failures')}, {ev.get('resizes')}) != "
+            f"log ({applied_fails}, {applied_resizes})")
+
+    detail = (f"{applied_fails} failures + {applied_resizes} resizes, "
+              f"availability {avail:.4g} >= {target:.4g}, checksum "
+              f"bit-exact vs fault-free replay"
+              + (f"; problems: {'; '.join(problems[:4])}" if problems
+                 else ""))
+    return [ClaimResult("elastic_integrity", rec, not problems, detail)]
+
+
 def check_record(rec: BenchRecord,
                  hw: HardwareSpec = TPU_V5E) -> Tuple[ClaimResult, ...]:
     """Verify all four paper claims (Eq. 4, Eq. 17/23/24, §6) for one record.
@@ -446,7 +561,9 @@ def check_serving_record(rec: ServingRecord,
     model-scale ``verdict`` payload (lm sessions) additionally get one
     result per entry in :data:`MODEL_CLAIMS` — the per-op
     classification re-derived and reconciled against the measured
-    decode-step wall time.
+    decode-step wall time — and records carrying a chaos ``events``
+    payload (ElasticSession) one per entry in :data:`ELASTIC_CLAIMS`,
+    the failures-move-latency-never-results contract.
     """
     # Eq. 17/23/24, §6 routing, Eq. 4: the same checks as per-call
     # sweep points, via the shared helper (a record claiming a bigger
@@ -481,6 +598,8 @@ def check_serving_record(rec: ServingRecord,
         f"({rec.completed}/{rec.offered} completed)"))
     if rec.verdict:
         results.extend(_verdict_checks(rec, hw))
+    if rec.events:
+        results.extend(_elastic_checks(rec, hw))
     return tuple(results)
 
 

@@ -209,6 +209,11 @@ class ServingRecord:
     model: Optional[str] = None
     phases: Optional[Mapping[str, Any]] = None
     verdict: Optional[Mapping[str, Any]] = None
+    # chaos sessions only (ElasticSession): the failure/resize event
+    # block ({"spec", "availability", "checksum", "fault_free": {...},
+    # "log": [...]}) the elastic_integrity claim re-verifies; None for
+    # ordinary sessions
+    events: Optional[Mapping[str, Any]] = None
 
     @property
     def point(self) -> Tuple[str, str, str, int, str, int]:
@@ -333,6 +338,13 @@ def _to_serving_record(raw: Mapping[str, Any], path: str) -> ServingRecord:
             raise ValueError(f"{path}: verdict must be an object with "
                              f"an 'ops' list, got {verdict!r}")
         verdict = dict(verdict)
+    events = raw.get("events")
+    if events is not None:
+        if not isinstance(events, Mapping) or \
+                not isinstance(events.get("log"), list):
+            raise ValueError(f"{path}: events must be an object with "
+                             f"a 'log' list, got {events!r}")
+        events = dict(events)
     return ServingRecord(
         kernel=str(raw["kernel"]),
         engine=str(raw["engine"]),
@@ -369,6 +381,7 @@ def _to_serving_record(raw: Mapping[str, Any], path: str) -> ServingRecord:
                if raw.get("model") is not None else None),
         phases=(dict(phases) if phases is not None else None),
         verdict=verdict,
+        events=events,
         **{k: (float(v) if v is not None else None)
            for k, v in opt.items()},
     )

@@ -11,6 +11,14 @@ written checkpoint is never visible.  ``AsyncCheckpointer`` runs the save
 on a writer thread (double-buffered, matching production async ckpt).
 Restore targets *any* mesh: arrays are loaded on host then device_put
 against the new sharding -- this is the elastic re-shard path.
+
+Restore is also corruption-tolerant when no explicit step is pinned: a
+checkpoint that turns out unreadable on disk (truncated npz, mangled
+manifest) is skipped with a warning and the next older complete step is
+tried, mirroring the tuning cache's warn-and-fall-back policy — crash
+recovery should degrade to an older snapshot, not refuse to start.
+Asking for a *specific* ``step=`` stays strict: the caller named the
+state they need, so silently serving older state would be a lie.
 """
 from __future__ import annotations
 
@@ -18,13 +26,24 @@ import json
 import os
 import shutil
 import threading
+import warnings
+import zipfile
 from pathlib import Path
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
 
+__all__ = ["AsyncCheckpointer", "checkpoint_meta", "latest_step",
+           "prune_old", "restore", "save"]
+
 Pytree = Any
+
+#: Failure modes of an on-disk checkpoint (vs. a caller bug): missing
+#: or truncated files, a zip container np.load cannot open, mangled
+#: manifest JSON, a leaf key the arrays archive no longer holds.
+_CORRUPT = (OSError, ValueError, KeyError, json.JSONDecodeError,
+            zipfile.BadZipFile)
 
 
 def _flatten(tree: Pytree) -> Dict[str, np.ndarray]:
@@ -67,10 +86,22 @@ def save(ckpt_dir: str | Path, step: int, tree: Pytree,
 
 
 def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    """The step named by ``LATEST``, or None when nothing is saved.
+
+    ``LATEST`` is written (atomically, last) by :func:`save`, so the
+    returned step is always a *complete* checkpoint directory."""
     f = Path(ckpt_dir) / "LATEST"
     if not f.exists():
         return None
     return int(f.read_text().strip().split("_")[-1])
+
+
+def _complete_steps(ckpt_dir: Path) -> List[int]:
+    """All complete (renamed, non-``.tmp``) step numbers, newest first."""
+    return sorted((int(p.name.split("_")[-1])
+                   for p in ckpt_dir.glob("step_*")
+                   if p.is_dir() and not p.name.endswith(".tmp")),
+                  reverse=True)
 
 
 def restore(ckpt_dir: str | Path, template: Pytree, step: Optional[int] = None,
@@ -79,12 +110,36 @@ def restore(ckpt_dir: str | Path, template: Pytree, step: Optional[int] = None,
 
     shardings: optional tree of NamedSharding for the *current* mesh --
     pass a different mesh's shardings to elastically re-shard.
+
+    With ``step=None`` (resume-from-newest), a corrupt step on disk is
+    skipped with a ``RuntimeWarning`` and the next older complete step
+    is tried — same warn-and-fall-back contract as the tuning cache.
+    An explicit ``step`` is strict and raises on corruption.
     """
     ckpt_dir = Path(ckpt_dir)
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    if step is not None:
+        return _restore_step(ckpt_dir, template, step, shardings)
+    steps = _complete_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    last_err: Optional[BaseException] = None
+    for s in steps:
+        try:
+            return _restore_step(ckpt_dir, template, s, shardings)
+        except _CORRUPT as err:
+            warnings.warn(
+                f"checkpoint step_{s:08d} under {ckpt_dir} is unreadable "
+                f"({type(err).__name__}: {err}); falling back to the "
+                f"previous complete step", RuntimeWarning, stacklevel=2)
+            last_err = err
+    raise FileNotFoundError(
+        f"no readable checkpoint under {ckpt_dir} "
+        f"({len(steps)} corrupt step(s) skipped)") from last_err
+
+
+def _restore_step(ckpt_dir: Path, template: Pytree, step: int,
+                  shardings: Optional[Pytree]) -> Pytree:
+    """Load one specific step directory into `template`'s structure."""
     folder = ckpt_dir / f"step_{step:08d}"
     data = np.load(folder / "arrays.npz")
 
@@ -106,6 +161,9 @@ def restore(ckpt_dir: str | Path, template: Pytree, step: Optional[int] = None,
 
 
 def checkpoint_meta(ckpt_dir: str | Path, step: int) -> Dict:
+    """One step's manifest: tree structure, leaf keys, and the saver's
+    ``extra`` sidecar (the elastic session stashes its scheduler/tuner
+    state there — see ``repro.serving.elastic.checkpoint_session``)."""
     folder = Path(ckpt_dir) / f"step_{step:08d}"
     return json.loads((folder / "manifest.json").read_text())
 
@@ -119,6 +177,10 @@ class AsyncCheckpointer:
         self._error: Optional[BaseException] = None
 
     def save(self, step: int, tree: Pytree, extra: Optional[Dict] = None):
+        """Snapshot ``tree`` to host memory and write it on the writer
+        thread.  Joins any in-flight save first (double-buffering depth
+        one), so the caller blocks only on host transfer, never on
+        disk."""
         self.wait()
         host_tree = jax.tree.map(np.asarray, tree)  # snapshot before async
 
@@ -131,6 +193,9 @@ class AsyncCheckpointer:
         self._thread.start()
 
     def wait(self):
+        """Join the in-flight save, re-raising any writer-thread error
+        here on the caller's thread.  Idempotent; a no-op when nothing
+        is in flight."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None

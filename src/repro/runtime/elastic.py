@@ -19,6 +19,8 @@ import jax
 from ..sharding import rules
 from . import checkpoint as ckpt
 
+__all__ = ["mesh_transition_plan", "reshard_restore"]
+
 Pytree = Any
 
 

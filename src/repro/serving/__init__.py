@@ -21,11 +21,22 @@ arrives as a request stream.  The layers:
   emitted as schema-4 records for ``repro.report`` and the
   ``benchmarks/compare.py`` p99/goodput gate.
 * :mod:`repro.serving.session` — the one-call session driver.
+* :mod:`repro.serving.elastic` — the elastic, fault-tolerant session:
+  mesh resizes under load (``Dispatcher.set_mesh`` +
+  ``runtime/elastic.mesh_transition_plan``), bit-exact re-dispatch of
+  a failed shard's ShardPlan ranges, checkpoint/restore through
+  ``runtime/checkpoint.AsyncCheckpointer``, and the seeded
+  fault/resize injector — evidence for the ``elastic_integrity``
+  claim.
 
 Entry points: ``python -m benchmarks.run serve`` (record-producing
-sweeps) and ``python -m repro.launch.serve`` (LM serving demo).
+sweeps; ``--chaos`` for fault injection) and
+``python -m repro.launch.serve`` (LM serving demo).
 """
 from .batcher import KernelBatchExecutor
+from .elastic import (ChaosEvent, ChaosInjector, ElasticKernelExecutor,
+                      ElasticSession, checkpoint_session,
+                      redispatch_failed_shard)
 from .loadgen import (WORKLOADS, BurstyLoadGen, ClosedLoopLoadGen, LoadGen,
                       PoissonLoadGen, TraceLoadGen, load_trace,
                       make_loadgen, save_trace)
@@ -39,11 +50,13 @@ from .session import SessionConfig, run_session
 from .slo import DEFAULT_SLO, SLO
 
 __all__ = [
-    "BatchExecution", "BatchPolicy", "BurstyLoadGen", "ClosedLoopLoadGen",
-    "ContinuousBatchingScheduler", "DEFAULT_SLO", "KernelBatchExecutor",
-    "LMDecodeExecutor", "LM_DECODE", "LoadGen", "PoissonLoadGen",
-    "Request", "RequestResult", "SLO", "ServingLog", "ServingSummary",
-    "SessionConfig", "TraceLoadGen", "WORKLOADS", "decode_traits",
-    "format_summary", "load_trace", "make_loadgen", "percentile",
-    "run_session", "save_trace", "serving_record", "summarize",
+    "BatchExecution", "BatchPolicy", "BurstyLoadGen", "ChaosEvent",
+    "ChaosInjector", "ClosedLoopLoadGen", "ContinuousBatchingScheduler",
+    "DEFAULT_SLO", "ElasticKernelExecutor", "ElasticSession",
+    "KernelBatchExecutor", "LMDecodeExecutor", "LM_DECODE", "LoadGen",
+    "PoissonLoadGen", "Request", "RequestResult", "SLO", "ServingLog",
+    "ServingSummary", "SessionConfig", "TraceLoadGen", "WORKLOADS",
+    "checkpoint_session", "decode_traits", "format_summary", "load_trace",
+    "make_loadgen", "percentile", "redispatch_failed_shard", "run_session",
+    "save_trace", "serving_record", "summarize",
 ]

@@ -35,6 +35,13 @@ max-over-shards — the serving percentiles then rest on real
 multi-device executions.  Requires the process to expose enough host
 devices (``repro.launch.mesh.host_device_count`` before JAX init;
 ``benchmarks.run serve --real`` does this).
+
+:class:`repro.serving.elastic.ElasticKernelExecutor` subclasses this
+executor to add fault injection (a shard's output dropped mid-batch
+and recovered from its ShardPlan ranges) and the per-request output
+fingerprints the elastic session's bit-exactness evidence rests on —
+the packing, Advice memoization, and shard-charging here are inherited
+unchanged.
 """
 from __future__ import annotations
 

@@ -132,6 +132,7 @@ def serving_record(summary: ServingSummary, *, kernel: str, engine: str,
                    model: Optional[str] = None,
                    phases: Optional[Dict] = None,
                    verdict: Optional[Dict] = None,
+                   events: Optional[Dict] = None,
                    results: Optional[Sequence[RequestResult]] = None,
                    ) -> Dict:
     """One schema-4 serving record: summary + analytic join fields.
@@ -155,12 +156,20 @@ def serving_record(summary: ServingSummary, *, kernel: str, engine: str,
     measured prefill/decode wall split), and ``verdict`` (the per-op
     model-scale classification the ``model_verdict`` claim checks);
     all three are None for kernel sessions.
+
+    Chaos sessions (:class:`~repro.serving.elastic.ElasticSession`)
+    carry ``events``: the failure/resize log, availability,
+    recovery-latency totals, and the chaos-vs-fault-free checksums the
+    ``elastic_integrity`` claim re-verifies.  None for ordinary
+    sessions, and then absent from the record (event-less records keep
+    the pre-elastic claim set).
     """
     del results  # per-request samples stay in-process; records are sums
     return {
         **({"model": str(model)} if model is not None else {}),
         **({"phases": dict(phases)} if phases is not None else {}),
         **({"verdict": dict(verdict)} if verdict is not None else {}),
+        **({"events": dict(events)} if events is not None else {}),
         "num_shards": int(num_shards),
         "mesh_exec_mode": (str(mesh_exec_mode)
                            if mesh_exec_mode is not None else None),

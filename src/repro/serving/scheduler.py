@@ -16,6 +16,12 @@ longest, and each queue is FIFO — with bounded batch compute times this
 gives a hard no-starvation guarantee (every admitted request launches
 within ``max_wait_s`` plus the residual of the batch in flight, once
 its queue's turn comes in oldest-first order).
+
+The admission (``_admit``) and batch-forming (``_ready_key``) policy
+methods are deliberately free of loop state: the elastic session
+(``repro.serving.elastic.ElasticSession``) reuses them headlessly —
+same queues, same triggers, same fairness — while interleaving its own
+failure/resize events into the virtual clock.
 """
 from __future__ import annotations
 

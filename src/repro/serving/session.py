@@ -13,12 +13,18 @@ import dataclasses
 from typing import Dict, Optional, Tuple
 
 from .batcher import KernelBatchExecutor
+# re-exported here so the fault-tolerance surface is reachable from the
+# session module (the orchestration layer callers already import):
+# checkpoint_session snapshots a session, redispatch_failed_shard is
+# the mid-batch recovery primitive the elastic loop applies
+from .elastic import checkpoint_session, redispatch_failed_shard
 from .loadgen import LoadGen, make_loadgen
 from .metrics import ServingSummary, serving_record, summarize
 from .scheduler import BatchPolicy, ContinuousBatchingScheduler, ServingLog
 from .slo import SLO, DEFAULT_SLO
 
-__all__ = ["SessionConfig", "run_session"]
+__all__ = ["SessionConfig", "checkpoint_session",
+           "redispatch_failed_shard", "run_session"]
 
 
 @dataclasses.dataclass(frozen=True)

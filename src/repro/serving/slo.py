@@ -16,7 +16,21 @@ from typing import Iterable
 
 from .requests import RequestResult
 
-__all__ = ["DEFAULT_SLO", "SLO"]
+__all__ = ["DEFAULT_SLO", "SLO", "availability"]
+
+
+def availability(completed: int, offered: int) -> float:
+    """Served fraction of the offered load (1.0 for an idle session).
+
+    The elastic-serving availability metric: injected failures
+    re-dispatch instead of dropping, so a healthy
+    :class:`~repro.serving.elastic.ElasticSession` completes every
+    admitted arrival and reports 1.0; anything below the
+    ``availability_target`` fails the ``elastic_integrity`` claim.
+    """
+    if offered <= 0:
+        return 1.0
+    return completed / offered
 
 
 @dataclasses.dataclass(frozen=True)

@@ -32,6 +32,13 @@ Three shard kinds cover every registered family (paper §3 suite):
 schema-5 BENCH records serialize; :class:`ShardPlan` adds the concrete
 per-shard ranges plus the traffic accounting the claims layer verifies
 (per-shard ceiling, aggregate-bandwidth consistency).
+
+The plan's per-shard ranges are also the fault-recovery contract: when
+a shard dies mid-batch, ``repro.serving.elastic.redispatch_failed_shard``
+replays exactly that shard's :func:`shard_call` slice (halo included
+for rowblock splits) and the recovered output is bit-identical to the
+lost one — the plan already knows what the dead shard owned, so no
+extra bookkeeping is needed to survive it.
 """
 from __future__ import annotations
 

@@ -46,7 +46,8 @@ def test_workflow_is_structurally_valid(name):
 def test_ci_matrix_split():
     wf = _load("ci.yml")
     jobs = wf["jobs"]
-    assert set(jobs) == {"lint-unit", "mesh-smoke", "lm-smoke", "slow"}
+    assert set(jobs) == {"lint-unit", "mesh-smoke", "lm-smoke",
+                         "chaos-smoke", "slow"}
 
     lint = jobs["lint-unit"]
     matrix = lint["strategy"]["matrix"]["python-version"]
@@ -86,12 +87,14 @@ def test_ci_pr_gate_uses_tuned_cache():
 
 def test_ci_serve_smoke_gate():
     """The fast serve-smoke: a short Poisson run on the two cheapest
-    families, gated on p99/goodput against the committed baseline."""
+    families, gated on p99/goodput against the committed baseline —
+    scoped to --mesh 1 so it is never blamed for the sharded chaos
+    baseline (chaos-smoke gates that width)."""
     runs = _run_text(_load("ci.yml")["jobs"]["lint-unit"])
     assert "benchmarks.run serve --workload poisson" in runs
     assert "--kernels scale,axpy" in runs
     assert "benchmarks.compare runs runs-ci-serve" in runs
-    assert "--kind serving" in runs
+    assert "--kind serving --mesh 1" in runs
 
 
 def test_ci_docs_link_check_step():
@@ -143,6 +146,33 @@ def test_ci_lm_smoke_job():
     assert uploads and "runs-ci-lm" in uploads[0]["with"]["path"]
 
 
+def test_ci_chaos_smoke_job():
+    """The elastic-runtime chaos smoke: a 2-way bursty serve under the
+    committed baseline's exact injected adversary, gated (incl. the
+    elastic_integrity claim and the availability arm) against the
+    committed schema-4 chaos baseline.  The spec and bare
+    rate/duration are load-bearing: chaos_spec is a comparability
+    knob, so compare.py refuses a drifted adversary."""
+    job = _load("ci.yml")["jobs"]["chaos-smoke"]
+    runs = _run_text(job)
+    assert ("benchmarks.run serve --workload bursty --kernels scale "
+            "--mesh 2 --chaos") in runs
+    assert '"fail@0.6:1,resize@1.1:4,resize@1.6:2"' in runs
+    assert "--out runs-ci-chaos" in runs
+    assert "benchmarks.compare runs runs-ci-chaos" in runs
+    assert "--kind serving --mesh 2" in runs
+    # no traffic knobs on the serve command (defaults must match the
+    # committed chaos baseline exactly)
+    serve_line = next(line for line in runs.splitlines()
+                      if "benchmarks.run serve" in line)
+    for knob in ("--rate", "--duration", "--max-batch", "--slo-ms",
+                 "--seed", "--size"):
+        assert knob not in serve_line
+    uploads = [s for s in job["steps"]
+               if "upload-artifact" in s.get("uses", "")]
+    assert uploads and "runs-ci-chaos" in uploads[0]["with"]["path"]
+
+
 def test_ci_model_tier_named_step():
     """The decode-engine + verdict test modules are a named fast-lane
     step (failures findable from the job summary)."""
@@ -173,11 +203,16 @@ def test_nightly_schedule_and_artifacts():
     assert "benchmarks.compare runs runs-nightly" in runs
     assert "benchmarks.run serve --tuned tuned.json" in runs
     assert "benchmarks.compare runs runs-serve-nightly" in runs
-    assert "--kind serving" in runs
+    assert "--kind serving --mesh 1" in runs
     assert "benchmarks.run tune --budget" in runs
+    # the chaos sweep replays the committed adversary and gates it
+    assert "--chaos \"fail@0.6:1,resize@1.1:4,resize@1.6:2\"" in runs
+    assert "benchmarks.compare runs runs-chaos-nightly" in runs
+    assert "--kind serving --mesh 2" in runs
     uploads = [s for s in job["steps"]
                if "upload-artifact" in s.get("uses", "")]
     assert uploads and uploads[0].get("if") == "always()"
     path = uploads[0]["with"]["path"]
     assert "tuned-nightly.json" in path and "compare-gate.txt" in path
     assert "runs-serve-nightly" in path and "serve-gate.txt" in path
+    assert "runs-chaos-nightly" in path and "chaos-gate.txt" in path

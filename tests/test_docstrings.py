@@ -1,8 +1,9 @@
 """Public-API documentation gate for the paper-facing modules.
 
 Every public symbol of ``repro.core.dispatch``, ``repro.kernels.registry``,
-``repro.report``, and the full ``repro.serving`` / ``repro.sharding``
-surfaces must carry a docstring, and the curated paper-facing callables
+``repro.report``, and the full ``repro.serving`` / ``repro.sharding`` /
+``repro.runtime`` (checkpoint + elastic) surfaces must carry a
+docstring, and the curated paper-facing callables
 must cite the paper section or equation they implement ("§n" or
 "Eq. n") so the code stays navigable against PAPER.md."""
 import importlib
@@ -26,6 +27,9 @@ MODULES = (
     "repro.serving.metrics",
     "repro.serving.session",
     "repro.serving.slo",
+    "repro.serving.elastic",
+    "repro.runtime.checkpoint",
+    "repro.runtime.elastic",
     "repro.sharding",
     "repro.sharding.plan",
     "repro.sharding.executor",

@@ -382,6 +382,100 @@ def test_serving_compare_gate(tmp_path):
     assert "config mismatch" in msgs and "rate_rps=64.0 vs 32.0" in msgs
 
 
+def _events_raw(**overrides):
+    """A healthy events block for a chaos session record: one applied
+    shard failure, bit-exact checksums, full availability."""
+    ev = {
+        "spec": "fail@0.1:1", "availability": 1.0,
+        "availability_target": 0.99, "p99_bound": 10.0,
+        "p99_slack_ms": 250.0, "checksum": 123.5,
+        "failures": 1, "resizes": 0, "recovery_ms_total": 2.0,
+        "fault_free": {"completed": 100, "offered": 100,
+                       "p99_ms": 25.0, "checksum": 123.5},
+        "log": [{"kind": "fail", "at_s": 0.1, "shard": 1, "width": 2,
+                 "batch_id": 3, "recovery_ms": 2.0,
+                 "redispatch_exact": True}],
+    }
+    ev.update(overrides)
+    return ev
+
+
+def test_chaos_compare_gate(tmp_path):
+    """Chaos sessions gate availability, and sessions under different
+    injected adversaries refuse to compare at all."""
+    from benchmarks.compare import compare
+
+    base, cand = tmp_path / "base", tmp_path / "cand"
+    base.mkdir(), cand.mkdir()
+    _write_serving(base / "BENCH_serve_scale.json",
+                   [_serving_raw(events=_events_raw())])
+    _write_serving(cand / "BENCH_serve_scale.json",
+                   [_serving_raw(events=_events_raw())])
+    assert compare(str(base), str(cand), kind="serving") == []
+    # recovery path starts dropping requests: availability gated
+    _write_serving(cand / "BENCH_serve_scale.json", [_serving_raw(
+        completed=50, throughput_rps=25.0, goodput_rps=25.0,
+        events=_events_raw(
+            availability=0.5,
+            fault_free={"completed": 50, "offered": 100,
+                        "p99_ms": 25.0, "checksum": 123.5}))])
+    msgs = "\n".join(compare(str(base), str(cand), kind="serving"))
+    assert "availability" in msgs
+    # a different chaos spec is a different experiment, not a regression
+    _write_serving(cand / "BENCH_serve_scale.json",
+                   [_serving_raw(events=_events_raw(spec="fail@0.3:0"))])
+    msgs = "\n".join(compare(str(base), str(cand), threshold=100.0,
+                             kind="serving"))
+    assert "config mismatch" in msgs and "chaos_spec" in msgs
+
+
+def test_chaos_replay_is_deterministic(tmp_path):
+    """Two elastic sessions under the identical seeded adversary replay
+    the same events, the same checksums, and the same record — and the
+    ingested record passes every serving claim plus elastic_integrity."""
+    from repro.report.claims import ELASTIC_CLAIMS
+    from repro.serving import ChaosInjector, ElasticSession
+
+    def _session():
+        cfg = SessionConfig(
+            kernel="scale", workload="bursty", rate_rps=128,
+            duration_s=0.5, size=4096, seed=0, num_shards=2,
+            policy=BatchPolicy(max_batch=4, max_wait_s=0.01))
+        return ElasticSession(
+            cfg, injector=ChaosInjector("fail@0.05:1,resize@0.1:4"),
+            max_shards=4)
+
+    _, _, rec1 = _session().run()
+    _, _, rec2 = _session().run()
+
+    def _shape(rec):
+        # the replayable invariants: event structure, checksums, and
+        # request accounting.  Latencies (recovery_ms, reactive at_s,
+        # percentiles) are *measured* walls and legitimately vary.
+        return {
+            "log": [tuple(e.get(k) for k in
+                          ("kind", "shard", "width", "from", "to",
+                           "reason", "skipped", "redispatch_exact",
+                           "reshard_exact"))
+                    for e in rec["events"]["log"]],
+            "checksum": rec["events"]["checksum"],
+            "availability": rec["events"]["availability"],
+            "offered": rec["offered"], "completed": rec["completed"],
+        }
+
+    assert _shape(rec1) == _shape(rec2)
+    assert rec1["events"]["checksum"] == rec1["events"]["fault_free"]["checksum"]
+    applied = [e for e in rec1["events"]["log"] if not e.get("skipped")]
+    assert any(e["kind"] == "fail" for e in applied)
+    # through the real ingestion path: serving claims + the elastic one
+    from benchmarks.common import write_serving_json
+    path = write_serving_json("scale", [rec1], str(tmp_path), mesh=2)
+    rec = load_file(path).records[0]
+    results = check_serving_record(rec)
+    assert tuple(r.claim for r in results) == SERVING_CLAIMS + ELASTIC_CLAIMS
+    assert all(r.passed for r in results)
+
+
 def test_batcher_survives_oversized_policy_batches():
     """A scheduler policy with a larger max_batch than the executor's
     must cost an extra compile, never a negative-pad crash."""
