@@ -34,12 +34,17 @@ across a point's engine records like ``ref_us_per_call``.
 """
 from __future__ import annotations
 
+import contextlib
+import statistics
 from typing import Iterable, List, Optional
 
 import numpy as np
 
 from repro.core.dispatch import DEFAULT_DISPATCHER
 from repro.kernels import registry
+from repro.obs.counters import roofline_sample
+from repro.obs.trace import capture as trace_capture
+from repro.obs.trace import write_chrome_trace
 from repro.sharding import ShardedExecutor, traffic
 from repro.sharding.executor import MeshExecutor
 
@@ -108,7 +113,18 @@ def records_for(op, mesh: int = 1, real: bool = False) -> List[dict]:
             advice = DEFAULT_DISPATCHER.advise(op, *args, **kw)
             traits = op.traits(*args, **kw)
             want = np.asarray(op.reference(*args, **kw), np.float32)
-            t = time_fn(lambda: op.reference(*args, **kw))
+            # the tracer observes the same samples the Timing reports:
+            # time_fn emits one span per iteration after the loop, so
+            # the per-record trace block reconciles against
+            # ref_us_per_call with only rounding slack
+            with trace_capture() as view:
+                t = time_fn(lambda: op.reference(*args, **kw),
+                            label="ref_call", layer="bench",
+                            kernel=op.name, size=size, dtype=dtype)
+            ref_spans = [e for e in view.events if e.name == "ref_call"]
+            ref_round = round(t.median_us, 1)
+            span_median = statistics.median(
+                e.dur_us for e in ref_spans)
             pred_us = traits.traffic_bytes / hw.mem_bw * 1e6
             plan = (sharded.plan(op, *args, **kw)
                     if sharded is not None else None)
@@ -118,6 +134,7 @@ def records_for(op, mesh: int = 1, real: bool = False) -> List[dict]:
             shard_field = (_shard_spec_field(op, plan, args, kw, hw)
                            if plan is not None else None)
             mesh_field = None
+            mesh_trace = None
             if mesh_exec is not None:
                 # one real shard_map execution per point, shared by the
                 # engine records (mesh bodies are XLA-native reference
@@ -127,9 +144,18 @@ def records_for(op, mesh: int = 1, real: bool = False) -> List[dict]:
                 mrun = mesh_exec.run(op, *args, plan=plan, **kw)
                 mesh_err = float(np.max(np.abs(
                     np.asarray(mrun.out, np.float32) - want)))
-                mesh_field = mesh_exec.measure(op, *args, plan=plan,
-                                               **kw)
+                with trace_capture() as mview:
+                    mesh_field = mesh_exec.measure(op, *args, plan=plan,
+                                                   **kw)
                 mesh_field["mesh_max_err"] = mesh_err
+                steps = [e for e in mview.events
+                         if e.name == "mesh_step"]
+                mesh_trace = {
+                    "spans": len(steps),
+                    "span_median_us": round(statistics.median(
+                        e.dur_us for e in steps), 3),
+                    "mesh_wall_us": mesh_field["mesh_wall_us"],
+                }
             for engine in sorted(op.engines):
                 # runs with the tuned tile config when one is cached --
                 # the correctness check covers the tiles we'd deploy
@@ -148,9 +174,23 @@ def records_for(op, mesh: int = 1, real: bool = False) -> List[dict]:
                     "dtype": dtype,
                     # one shared timing per (size, dtype): the oracle's
                     # XLA-CPU wall time, NOT the engine variant's
-                    "ref_us_per_call": round(t.median_us, 1),
+                    "ref_us_per_call": ref_round,
                     "iqr_us": round(t.iqr_us, 1),
                     "iters": t.iters,
+                    # the tracer's independent account of the same
+                    # measurement; the roofline gauge is derived from
+                    # the *recorded* (rounded) median so the
+                    # trace_reconciliation claim re-derives it exactly
+                    "trace": {
+                        "clock": "wall",
+                        "spans": len(ref_spans),
+                        "span_median_us": round(span_median, 3),
+                        "roofline": roofline_sample(
+                            traits, hw, engine, dtype,
+                            ref_round).as_attrs(),
+                        **({"mesh": mesh_trace}
+                           if mesh_trace is not None else {}),
+                    },
                     "max_err": err,
                     "intensity": traits.intensity,
                     "memory_bound": advice.memory_bound,
@@ -169,7 +209,16 @@ def rows(names: Optional[Iterable[str]] = None,
          json_dir: Optional[str] = "runs",
          tuned: Optional[str] = None,
          mesh: int = 1,
-         real: bool = False) -> List[dict]:
+         real: bool = False,
+         trace_out: Optional[str] = None) -> List[dict]:
+    """Sweep the registry; optionally export the full span timeline.
+
+    With *trace_out* the whole sweep runs under an enabled tracer
+    (dispatch/launch spans, timing iterations, mesh steps) and the
+    collected events are written as Chrome-trace JSON — the per-record
+    reconciliation captures nest inside this outer one, so the export
+    sees everything they saw.
+    """
     if tuned is not None:
         # sweep with tuned tile configs: dispatch consults the cache
         # for every launch and each record says which tiles it used
@@ -190,20 +239,33 @@ def rows(names: Optional[Iterable[str]] = None,
             # recorded in every file's env block
             overlap = MeshExecutor(mesh).overlap_probe()
         out = []
-        for op in registry.all_ops():
-            if wanted is not None and op.name not in wanted:
-                continue
-            recs = records_for(op, mesh=mesh, real=real)
-            if json_dir:
-                env = bench_env(interpret=True,
-                                hw_model=DEFAULT_DISPATCHER.hw.name)
-                if mesh > 1:
-                    env["mesh_shape"] = [mesh]
-                    env["mesh_exec_mode"] = "mesh" if real else "virtual"
-                if overlap is not None:
-                    env["collective_overlap"] = overlap
-                write_json(op.name, recs, json_dir, env=env, mesh=mesh)
-            out.extend(_csv_rows(recs, mesh))
+        with contextlib.ExitStack() as stack:
+            # enable the process tracer for the whole sweep only when
+            # an export was asked for; the per-record reconciliation
+            # captures enable it around their own timing either way
+            sweep_view = (stack.enter_context(trace_capture())
+                          if trace_out is not None else None)
+            for op in registry.all_ops():
+                if wanted is not None and op.name not in wanted:
+                    continue
+                recs = records_for(op, mesh=mesh, real=real)
+                if json_dir:
+                    env = bench_env(interpret=True,
+                                    hw_model=DEFAULT_DISPATCHER.hw.name)
+                    if mesh > 1:
+                        env["mesh_shape"] = [mesh]
+                        env["mesh_exec_mode"] = ("mesh" if real
+                                                 else "virtual")
+                    if overlap is not None:
+                        env["collective_overlap"] = overlap
+                    write_json(op.name, recs, json_dir, env=env,
+                               mesh=mesh)
+                out.extend(_csv_rows(recs, mesh))
+        if sweep_view is not None:
+            write_chrome_trace(trace_out, sweep_view.events,
+                               meta={"source": "benchmarks.bench_kernels",
+                                     "mesh": mesh,
+                                     "real": bool(real)})
         return out
     finally:
         DEFAULT_DISPATCHER.set_mesh(prior_mesh, prior_mode)

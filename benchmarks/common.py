@@ -39,14 +39,23 @@ __all__ = ["SCHEMA_VERSION", "SERVING_SCHEMA_VERSION", "Timing",
 #: (``repro.sharding.executor.MeshExecutor``: shard_map wall time over
 #: N actual XLA devices, the ppermute halo exchange's own collective
 #: time, the virtual-clock analogue, their skew, and the real-mesh
-#: max_err), null for single-device and virtual-mesh sweep points.
-SCHEMA_VERSION = 6
+#: max_err), null for single-device and virtual-mesh sweep points;
+#: schema 7 adds the per-record ``trace`` field — the ``repro.obs``
+#: tracer's reconciliation block (span counts and medians from the
+#: timing iterations plus the roofline gauge derived from the record's
+#: own traffic/time/hardware), verified record-by-record by the
+#: ``trace_reconciliation`` claim.
+SCHEMA_VERSION = 7
 
 #: Version of the serving record file format (``BENCH_serve_*.json``):
 #: schema 4 marks a ``"kind": "serving"`` set whose records are
 #: latency-percentile/goodput session summaries from
-#: ``repro.serving.metrics.serving_record``.
-SERVING_SCHEMA_VERSION = 4
+#: ``repro.serving.metrics.serving_record``; schema 5 adds the
+#: per-record ``trace`` field (virtual-clock span counts vs. the
+#: session log's own accounting — serving files are told apart from
+#: bench schema 5 by their ``"kind": "serving"`` marker, not the
+#: number).
+SERVING_SCHEMA_VERSION = 5
 
 
 def emit(rows: List[dict], out: Optional[TextIO] = None) -> None:
@@ -100,10 +109,11 @@ def write_json(kernel: str, records: List[dict], out_dir: str = "runs",
                env: Optional[dict] = None, mesh: int = 1) -> str:
     """Write machine-readable per-kernel records to BENCH_<kernel>.json.
 
-    Schema 5: ``{"schema": 5, "kernel": ..., "env": {...}, "records":
+    Schema 7: ``{"schema": 7, "kernel": ..., "env": {...}, "records":
     [...]}`` with one record per (engine, size, dtype) sweep point
-    (including its ``tile_config``, if tuned, and its
-    ``mesh_shape``/``shard_spec`` when swept under a mesh) so the perf
+    (including its ``tile_config``, if tuned, its
+    ``mesh_shape``/``shard_spec`` when swept under a mesh, and its
+    observability ``trace`` block) so the perf
     trajectory is diffable across PRs and auditable by the
     ``repro.report`` claim checks.  Mesh sweeps (``mesh > 1``) land in
     ``BENCH_<kernel>_mesh<N>.json`` beside the single-device baseline
@@ -121,7 +131,7 @@ def write_serving_json(kernel: str, records: List[dict],
                        env: Optional[dict] = None, mesh: int = 1) -> str:
     """Write one kernel's serving sessions to BENCH_serve_<kernel>.json.
 
-    Schema 4: ``{"schema": 4, "kind": "serving", "kernel": ..., "env":
+    Schema 5: ``{"schema": 5, "kind": "serving", "kernel": ..., "env":
     {...}, "records": [...]}`` with one record per (engine, workload,
     size, dtype) session, consumed by ``repro.report`` (serving claim
     checks + REPORT.md serving section) and gated on p99/goodput by

@@ -18,7 +18,8 @@ when
   or its ``goodput_rps`` drops by more than ``--threshold``,
 * any candidate record violates a paper claim (Eq. 23/24 ceiling,
   §6 routing, oracle accuracy, Eq. 4 boundedness — §6-under-load,
-  percentile and goodput consistency for serving records),
+  percentile and goodput consistency for serving records, and the
+  ``trace_reconciliation`` check on schema-7 observability blocks),
 * a joined pair of **chaos** serving sessions (both sides carrying an
   ``events`` block from ``serve --chaos``) drops its availability
   under failure by more than the same threshold,

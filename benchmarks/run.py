@@ -46,6 +46,14 @@ real mesh too, attaching measured ``mesh_exec`` evidence (wall /
 collective / virtual-analogue µs + skew) to each record and a
 ``collective_overlap`` probe (§4.1's overlapped-vs-serialized ring
 matmul, measured) to the file's env block.
+
+``--trace out.json`` runs the sweep under the ``repro.obs`` tracer and
+exports every span (dispatch, launches with roofline counters, timing
+iterations, mesh steps) as Chrome-trace JSON loadable in Perfetto /
+``chrome://tracing`` and validated by ``python -m repro.obs.trace``.
+
+``--verbose`` raises the structured logger (``repro.obs.log``) to info
+so the quiet-by-default diagnostics print to stderr.
 """
 from __future__ import annotations
 
@@ -102,9 +110,14 @@ def main(argv: Optional[List[str]] = None) -> None:
         out_dir = taken
     tuned = _take_flag(argv, "--tuned", "a tuned.json path argument")
     mesh_arg = _take_flag(argv, "--mesh", "a shard-count argument")
+    trace_out = _take_flag(argv, "--trace", "an output path argument")
     real = "--real" in argv
     if real:
         argv.remove("--real")
+    if "--verbose" in argv:
+        argv.remove("--verbose")
+        from repro.obs.log import LOG
+        LOG.configure(level="info")
     try:
         mesh = 1 if mesh_arg is None else int(mesh_arg)
     except ValueError:
@@ -127,6 +140,8 @@ def main(argv: Optional[List[str]] = None) -> None:
             raise SystemExit("--mesh only applies to kernel sweeps")
         if real:
             raise SystemExit("--real only applies to kernel sweeps")
+        if trace_out is not None:
+            raise SystemExit("--trace only applies to kernel sweeps")
         # `report runs-ci` and `report --out runs-ci` both read runs-ci
         if out_given and len(argv) > 1:
             raise SystemExit("report: pass the records dir positionally "
@@ -145,16 +160,20 @@ def main(argv: Optional[List[str]] = None) -> None:
         raise SystemExit("--mesh only applies to kernel sweeps")
     if real and not sweeps:
         raise SystemExit("--real only applies to kernel sweeps")
+    if trace_out is not None and not sweeps:
+        raise SystemExit("--trace only applies to kernel sweeps")
     print("name,us_per_call,derived")
     for key in which:
         if key in THEORY:
             emit(THEORY[key].rows())
         elif key in ("kernels", "sweep"):
             emit(bench_kernels.rows(json_dir=out_dir, tuned=tuned,
-                                    mesh=mesh, real=real))
+                                    mesh=mesh, real=real,
+                                    trace_out=trace_out))
         elif key in kernel_names:
             emit(bench_kernels.rows([key], json_dir=out_dir, tuned=tuned,
-                                    mesh=mesh, real=real))
+                                    mesh=mesh, real=real,
+                                    trace_out=trace_out))
         else:
             raise SystemExit(
                 f"unknown benchmark {key!r}; have "

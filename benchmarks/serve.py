@@ -25,6 +25,13 @@ virtual clock and an open-loop workload, so it composes with
 ``--mesh`` but refuses ``--real``, ``--workload closed``, and
 ``--workload lm``.
 
+``--trace-out PATH`` exports the sweep's virtual-clock span timeline
+(admissions, queue waits, batch launches; chaos injections and
+redispatches under ``--chaos``) as Chrome-trace JSON — ``--trace``
+names a *workload input* file, ``--trace-out`` the observability
+export.  Records always carry the compact ``trace`` reconciliation
+block either way (the ``trace_reconciliation`` claim checks it).
+
 ``--workload lm`` switches from kernel families to whole-model decode:
 each ``--config`` architecture (smoke-sized for execution, full-sized
 for the analytics) is served through the scan-over-layers
@@ -114,6 +121,13 @@ def _parse(argv: Optional[List[str]]) -> argparse.Namespace:
                         "steps are wall-time slow)")
     p.add_argument("--trace", default=None,
                    help="JSON trace path (required for --workload trace)")
+    p.add_argument("--trace-out", default=None, metavar="PATH",
+                   help="export the sessions' span timeline (virtual "
+                        "clock: admits, queues, batches, chaos "
+                        "injections, redispatches, resizes) as "
+                        "Chrome-trace JSON; --trace names the "
+                        "*workload input*, this names the "
+                        "observability output")
     p.add_argument("--tuned", default=None,
                    help="tuned.json for tile-aware packing/dispatch")
     p.add_argument("--out", default="runs",
@@ -190,6 +204,30 @@ def _serve_lm(args: argparse.Namespace) -> int:
     return 0
 
 
+def _run_traced(args: argparse.Namespace, fn) -> int:
+    """Run *fn* (the session sweep) under the obs tracer if asked.
+
+    With ``--trace-out`` every session's virtual-clock spans — plus the
+    chaos instants for ``--chaos`` runs — are collected across the
+    whole sweep and exported as one Chrome-trace file; the sessions'
+    own per-record reconciliation captures nest inside this one.
+    """
+    if not args.trace_out:
+        return fn()
+    from repro.obs.trace import capture as trace_capture
+    from repro.obs.trace import write_chrome_trace
+    with trace_capture() as view:
+        status = fn()
+    write_chrome_trace(args.trace_out, view.events,
+                       meta={"source": "benchmarks.serve",
+                             "workload": args.workload,
+                             "chaos": args.chaos or "",
+                             "seed": args.seed,
+                             "mesh": args.mesh})
+    print(f"# wrote {args.trace_out}")
+    return status
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     args = _parse(argv)
     lm = args.workload == "lm"
@@ -227,7 +265,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         except ValueError as err:
             raise SystemExit(f"bad --chaos spec: {err}")
     if lm:
-        return _serve_lm(args)
+        return _run_traced(args, lambda: _serve_lm(args))
     if args.workload == "trace" and not args.trace:
         raise SystemExit("--workload trace requires --trace PATH")
     if args.real:
@@ -276,34 +314,39 @@ def main(argv: Optional[List[str]] = None) -> int:
         env["mesh_exec_mode"] = "mesh" if args.real else "virtual"
     print("kernel,engine,workload,completed,p50_ms,p99_ms,goodput_rps,"
           "slo_attainment")
-    for kernel in names:
-        records = []
-        # per-kernel view of the once-parsed trace (None for the
-        # synthetic workloads: run_session builds those generators)
-        source = None if trace is None else TraceLoadGen(
-            requests=[r for r in trace.requests if r.kernel == kernel])
-        for engine in ENGINES:
-            cfg = SessionConfig(
-                kernel=kernel, workload=args.workload, engine=engine,
-                rate_rps=args.rate, duration_s=args.duration,
-                size=args.size, dtype=args.dtype, seed=args.seed,
-                policy=policy, slo=slo, trace_path=args.trace,
-                num_shards=args.mesh, real_mesh=args.real)
-            if injector is not None:
-                from repro.serving import ElasticSession
-                session = ElasticSession(cfg, injector=injector)
-                _, summary, record = session.run()
-            else:
-                _, summary, record = run_session(cfg, source=source)
-            records.append(record)
-            print(f"{kernel},{record['engine']},{args.workload},"
-                  f"{summary.completed},{summary.p50_ms:.3f},"
-                  f"{summary.p99_ms:.3f},{summary.goodput_rps:.3f},"
-                  f"{summary.slo_attainment:.4f}")
-        path = write_serving_json(kernel, records, args.out, env=env,
-                                  mesh=args.mesh)
-        print(f"# wrote {path}")
-    return 0
+
+    def _sweep() -> int:
+        for kernel in names:
+            records = []
+            # per-kernel view of the once-parsed trace (None for the
+            # synthetic workloads: run_session builds those generators)
+            source = None if trace is None else TraceLoadGen(
+                requests=[r for r in trace.requests
+                          if r.kernel == kernel])
+            for engine in ENGINES:
+                cfg = SessionConfig(
+                    kernel=kernel, workload=args.workload, engine=engine,
+                    rate_rps=args.rate, duration_s=args.duration,
+                    size=args.size, dtype=args.dtype, seed=args.seed,
+                    policy=policy, slo=slo, trace_path=args.trace,
+                    num_shards=args.mesh, real_mesh=args.real)
+                if injector is not None:
+                    from repro.serving import ElasticSession
+                    session = ElasticSession(cfg, injector=injector)
+                    _, summary, record = session.run()
+                else:
+                    _, summary, record = run_session(cfg, source=source)
+                records.append(record)
+                print(f"{kernel},{record['engine']},{args.workload},"
+                      f"{summary.completed},{summary.p50_ms:.3f},"
+                      f"{summary.p99_ms:.3f},{summary.goodput_rps:.3f},"
+                      f"{summary.slo_attainment:.4f}")
+            path = write_serving_json(kernel, records, args.out, env=env,
+                                      mesh=args.mesh)
+            print(f"# wrote {path}")
+        return 0
+
+    return _run_traced(args, _sweep)
 
 
 if __name__ == "__main__":

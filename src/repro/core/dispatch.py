@@ -29,6 +29,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import os
+import time
 from typing import (Any, Callable, Dict, Hashable, Mapping, Optional,
                     Sequence, Tuple)
 
@@ -36,6 +37,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..obs.counters import roofline_sample
+from ..obs.log import LOG
+from ..obs.metrics import REGISTRY
+from ..obs.trace import TRACER
 from .advisor import DEFAULT_ADVISOR, Advice, EngineAdvisor
 from .intensity import KernelTraits
 
@@ -334,7 +339,26 @@ class Dispatcher:
         defaults apply.  Config keys are validated against the op's
         declared ``tile_space`` so a stale cache cannot smuggle unknown
         kwargs into a kernel launch.
+
+        When the :mod:`repro.obs` tracer is enabled, the call is
+        wrapped in a ``dispatch`` span (routing + tile lookup) with a
+        nested ``launch`` span around the engine body; the launch span
+        blocks on the result and carries the Eq. 2/3/4 roofline
+        counters for the measured wall time.  Disabled tracing costs
+        one attribute check.
         """
+        if not TRACER.enabled:
+            return self._run(op, *args, engine=engine, interpret=interpret,
+                             tile_config=tile_config, **kwargs)
+        with TRACER.span("dispatch", layer="dispatch",
+                         kernel=op.name) as span_attrs:
+            return self._run(op, *args, engine=engine, interpret=interpret,
+                             tile_config=tile_config,
+                             _span_attrs=span_attrs, **kwargs)
+
+    def _run(self, op, *args, engine: str, interpret: bool,
+             tile_config: Optional[Mapping[str, int]],
+             _span_attrs: Optional[Dict[str, Any]] = None, **kwargs):
         # tile params never move a kernel on the roofline: strip them
         # before the advise path so traits factories only see semantic
         # kwargs, then re-apply them for the launch itself
@@ -374,7 +398,30 @@ class Dispatcher:
             else:  # tuned values fill gaps; a None kwarg is a gap too
                 kwargs = {**kwargs, **{k: v for k, v in cfg.items()
                                        if kwargs.get(k) is None}}
-        return fn(*args, interpret=interpret, **kwargs)
+        if _span_attrs is None:
+            return fn(*args, interpret=interpret, **kwargs)
+        # traced launch: block on the result so the span duration is
+        # the call's real wall time, then attach the roofline counters
+        # (modeled bytes / achieved GB/s / % of bound and ceiling)
+        dtype = _dtype_of(args, kwargs) or ""
+        _span_attrs.update(engine=eng, dtype=dtype)
+        with TRACER.span("launch", layer="dispatch", kernel=op.name,
+                         engine=eng, dtype=dtype) as launch_attrs:
+            t0 = time.perf_counter()
+            out = fn(*args, interpret=interpret, **kwargs)
+            jax.block_until_ready(out)
+            dur_us = (time.perf_counter() - t0) * 1e6
+            try:
+                sample = roofline_sample(op.traits(*args, **semantic),
+                                         self.hw, eng, dtype, dur_us)
+                launch_attrs.update(sample.as_attrs())
+                REGISTRY.counter("dispatch.launches").inc()
+                REGISTRY.histogram(
+                    f"dispatch.launch_us.{op.name}.{eng}").observe(dur_us)
+            except (TypeError, ValueError) as e:
+                LOG.debug("roofline counters unavailable",
+                          kernel=op.name, engine=eng, error=str(e))
+        return out
 
     def load_tuned(self, path: str) -> None:
         """Adopt a tuned.json and invalidate memoized Advice.

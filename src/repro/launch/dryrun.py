@@ -31,6 +31,7 @@ from ..configs import ARCHS, get_arch
 from ..core import TPU_V5E, collective_stats
 from ..core.jaxpr_cost import program_cost
 from ..models import lm
+from ..obs.log import LOG
 from ..optim.adamw import AdamW
 from ..sharding import rules
 from . import steps
@@ -282,6 +283,7 @@ def main() -> None:
     ap.add_argument("--params-dtype", default=None, choices=(None, "bf16"))
     ap.add_argument("--tag", default=None, help="label for this opts combo")
     args = ap.parse_args()
+    LOG.configure(level="info")   # launcher mains narrate by default
 
     out = Path(args.out)
     out.parent.mkdir(parents=True, exist_ok=True)
@@ -306,9 +308,9 @@ def main() -> None:
         for arch, cell in pairs:
             key = f"{arch}/{cell}/{mesh_name}{tag}"
             if key in rows and not args.force:
-                print(f"[skip-cached] {key}")
+                LOG.info("skip-cached", cell=key)
                 continue
-            print(f"[lower+compile] {key} ...", flush=True)
+            LOG.info("lower+compile", cell=key)
             try:
                 # multi-pod rows prove compile+fit; roofline variants are
                 # derived on the single-pod mesh only (spec: §Roofline)
@@ -317,6 +319,8 @@ def main() -> None:
                                         skip_variants=multi_pod)
             except Exception as e:  # a failure here is a sharding bug
                 traceback.print_exc()
+                LOG.error("lower+compile failed", cell=key,
+                          error=f"{type(e).__name__}: {e}")
                 meta = {"arch": arch, "cell": cell, "mesh": mesh_name,
                         "tag": args.tag,
                         "error": f"{type(e).__name__}: {e}"}
@@ -328,12 +332,17 @@ def main() -> None:
             if "skipped" in meta:
                 meta = {"arch": arch, "cell": cell, "mesh": mesh_name,
                         "tag": args.tag, "skipped": meta["skipped"]}
-                print(f"  -> SKIP: {meta['skipped']}")
+                LOG.info("cell skipped", cell=key,
+                         reason=meta["skipped"])
             else:
-                print(f"  -> ok: {meta['bytes_per_device']['total_gb']} "
-                      f"GiB/dev, dominant={meta['dominant']}, "
-                      f"t_bound={max(meta['t_compute_s'], meta['t_memory_s'], meta['t_collective_s']):.4f}s "
-                      f"({meta['lower_compile_s']}s to compile)")
+                LOG.info(
+                    "cell ok", cell=key,
+                    gib_per_dev=meta["bytes_per_device"]["total_gb"],
+                    dominant=meta["dominant"],
+                    t_bound_s=round(max(meta["t_compute_s"],
+                                        meta["t_memory_s"],
+                                        meta["t_collective_s"]), 4),
+                    compile_s=meta["lower_compile_s"])
             rows[key] = meta
             out.write_text(json.dumps(list(rows.values()), indent=1,
                                       default=str))

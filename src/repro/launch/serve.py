@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from ..configs import ARCHS, get_arch, reduced
 from ..core.dispatch import DEFAULT_DISPATCHER
+from ..obs.log import LOG
 from ..serving import (BatchPolicy, LMDecodeExecutor, SLO, SessionConfig,
                        format_summary, run_session)
 from ..serving.lm import decode_traits
@@ -49,22 +50,25 @@ def main():
     ap.add_argument("--slo-ms", type=float, default=1000.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    LOG.configure(level="info")   # launcher mains narrate by default
 
     full = get_arch(args.arch)
     cfg = reduced(full) if args.reduced else full
 
     # dispatch layer: the production-size decode step is memory-bound
     traits = decode_traits(full, 128, 32768)
-    print(f"[advisor] {DEFAULT_DISPATCHER.advise_traits(traits)}")
+    LOG.info("advisor", arch=full.name,
+             advice=DEFAULT_DISPATCHER.advise_traits(traits))
 
     # the model-scale verdict: what fraction of a full-size decode
     # step the Eq. 23/24 memory-bound ceiling governs, op by op
     from ..models.advisor_map import model_verdict
     v = model_verdict(full, args.batch, args.prompt_len + args.gen)
-    print(f"[verdict] {v.model}: memory-bound ops govern "
-          f"{v.memory_bound_time_frac:.1%} of step time, "
-          f"{v.memory_bound_bytes_frac:.1%} of bytes "
-          f"({sum(1 for o in v.ops if o.memory_bound)}/{len(v.ops)} ops)")
+    LOG.info("model verdict", model=v.model,
+             memory_bound_time_frac=f"{v.memory_bound_time_frac:.1%}",
+             memory_bound_bytes_frac=f"{v.memory_bound_bytes_frac:.1%}",
+             memory_bound_ops=sum(1 for o in v.ops if o.memory_bound),
+             ops=len(v.ops))
 
     executor = LMDecodeExecutor(cfg, max_batch=args.batch,
                                 prompt_len=args.prompt_len,

@@ -26,6 +26,7 @@ from ..core.dispatch import DEFAULT_DISPATCHER
 from ..core.intensity import KernelTraits
 from ..data.pipeline import TokenPipeline
 from ..models import lm
+from ..obs.log import LOG
 from ..optim.adamw import AdamW, cosine_schedule
 from ..runtime.train_loop import (StragglerWatchdog, TrainLoopConfig, run)
 from ..sharding import rules
@@ -49,6 +50,7 @@ def main():
     ap.add_argument("--grad-compress", default=None,
                     choices=(None, "bf16", "int8"))
     args = ap.parse_args()
+    LOG.configure(level="info")   # launcher mains narrate by default
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -63,7 +65,8 @@ def main():
     traits = KernelTraits(f"train_step@{cfg.name}",
                           6.0 * cfg.param_count() * tokens,
                           16.0 * cfg.param_count())
-    print(f"[advisor] {DEFAULT_DISPATCHER.advise_traits(traits)}")
+    LOG.info("advisor", arch=cfg.name,
+             advice=DEFAULT_DISPATCHER.advise_traits(traits))
 
     opt = AdamW(lr=cosine_schedule(args.lr, 10, args.steps))
     pipe = TokenPipeline(cfg, global_batch=args.batch, seq=args.seq)

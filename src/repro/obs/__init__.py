@@ -1,0 +1,42 @@
+"""Unified observability: two-clock tracing, roofline counters,
+metrics, and structured logging for every layer of the reproduction.
+
+The paper's argument is an accounting argument — Eq. 4 traffic bounds
+and the Eq. 23/24 ceiling — and this package makes that accounting
+visible *while it happens* instead of only re-derivable from medians
+after the fact:
+
+* :mod:`repro.obs.trace` — span tracer on both clocks (real wall time
+  for dispatch/mesh launches, the serving virtual clock for
+  scheduler/chaos events) with byte-deterministic Chrome-trace export
+  and a ``python -m repro.obs.trace`` validator CLI.
+* :mod:`repro.obs.counters` — per-launch roofline counters: modeled
+  bytes (Eq. 2 traits), measured µs, achieved GB/s, percent of the
+  Eq. 4 bandwidth bound, percent of the Eq. 3/23/24 attainable
+  ceiling.
+* :mod:`repro.obs.metrics` — counters/gauges/histograms sharing the
+  serving layer's numpy percentile semantics.
+* :mod:`repro.obs.log` — the leveled structured logger replacing
+  ad-hoc prints and bare RuntimeWarnings (quiet by default;
+  ``benchmarks.run --verbose`` opts into info).
+
+The trace evidence is *verified*, not just pretty: bench/serving
+records carry a ``trace`` reconciliation payload and
+``repro.report.claims`` proves span sums match the recorded
+``ref_us_per_call`` / ``mesh_wall_us`` / serving compute totals
+(the ``trace_reconciliation`` claim).  See docs/observability.md.
+"""
+from .counters import RooflineSample, roofline_sample
+from .log import LEVELS, LOG, LogRecord, StructuredLogger
+from .metrics import REGISTRY, Counter, Gauge, Histogram, MetricsRegistry
+from .trace import (TRACER, SpanEvent, TraceView, Tracer, capture,
+                    chrome_trace, dump_chrome_trace, read_chrome_trace,
+                    validate_chrome_trace, write_chrome_trace)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "LEVELS", "LOG", "LogRecord",
+    "MetricsRegistry", "REGISTRY", "RooflineSample", "SpanEvent",
+    "StructuredLogger", "TRACER", "TraceView", "Tracer", "capture",
+    "chrome_trace", "dump_chrome_trace", "read_chrome_trace",
+    "roofline_sample", "validate_chrome_trace", "write_chrome_trace",
+]

@@ -70,6 +70,24 @@ the plan's wire accounting:
   the real-mesh output matched the oracle within the dtype tolerance
   (``mesh_max_err``) — the measured execution that produced the wall
   time computed the right answer through real ppermute halo exchange.
+
+Schema-7 records (and serving schema 5) carrying the observability
+``trace`` block additionally pass **trace_reconciliation**
+(:data:`TRACE_CLAIMS`): the :mod:`repro.obs` tracer's independent
+account of the same measurement must agree with the record it rode in
+on.  For a bench record the span count equals the timing iterations,
+the span-median microseconds equal ``ref_us_per_call`` within rounding
+(the span *is* the sample — ``time_fn`` emits the recorded
+(start, duration) pairs, so only serialization rounding may differ),
+the roofline gauge (achieved GB/s, %-of-Eq.-4-bound,
+%-of-Eq.-3-ceiling) re-derives exactly from the record's own traffic,
+time, and hardware model, and a measured-mesh point's ``mesh_step``
+spans reconcile against ``mesh_exec.mesh_wall_us``.  For a serving
+record the virtual-clock batch spans equal the logged launches and the
+summed span compute equals the log's compute total; a chaos session's
+redispatch spans equal the applied failure count and every applied
+failure/resize left its instant on the timeline.  A trace that drifts
+from the evidence it narrates turns the report red.
 """
 from __future__ import annotations
 
@@ -81,11 +99,12 @@ from ..core.balance import machine_balance
 from ..core.bounds import tensor_core_upper_bound, workload_upper_bound
 from ..core.hw import PLATFORMS, TPU_V5E, HardwareSpec
 from ..core.intensity import KernelTraits
+from ..obs.counters import roofline_sample
 from .records import BenchRecord, RecordSet, ServingRecord
 
 __all__ = ["CLAIMS", "ClaimResult", "ELASTIC_CLAIMS", "MESH_CLAIMS",
            "MODEL_CLAIMS", "SERVING_CLAIMS", "SHARD_CLAIMS", "TOLERANCE",
-           "ceiling_bound", "check_record", "check_records",
+           "TRACE_CLAIMS", "ceiling_bound", "check_record", "check_records",
            "check_serving_record", "hw_for", "violations"]
 
 #: Claim identifiers, in report order.
@@ -112,6 +131,17 @@ MODEL_CLAIMS = ("model_verdict",)
 #: an ``events`` payload): failures and resizes moved latency, never
 #: results, and never past the availability/p99 floors.
 ELASTIC_CLAIMS = ("elastic_integrity",)
+
+#: Extra claim for records carrying the observability ``trace`` block
+#: (bench schema 7 / serving schema 5): the tracer's independent
+#: account of the measurement reconciles with the record it rode in on.
+TRACE_CLAIMS = ("trace_reconciliation",)
+
+#: Rounding slack for span-vs-record microsecond comparisons:
+#: ``ref_us_per_call``/``mesh_wall_us`` are rounded to 0.1 µs at record
+#: time and the span medians to 0.001 µs, so two exact-equal timings
+#: may differ by half of the coarser step (0.05) plus the finer one.
+_TRACE_US_SLACK = 0.051
 
 #: Ceiling on the wire bandwidth a measured collective may imply
 #: (wire_bytes / collective seconds).  1 TB/s comfortably exceeds any
@@ -325,6 +355,152 @@ def _mesh_checks(rec: BenchRecord,
     return [collective_cost, mesh_skew]
 
 
+def _trace_checks(rec: BenchRecord,
+                  hw: HardwareSpec) -> List[ClaimResult]:
+    """The TRACE_CLAIMS check for one bench record's trace block.
+
+    ``time_fn`` emits one span per timing iteration carrying the
+    *recorded* (start, duration) sample — the span is the sample, not a
+    re-measurement — so the reconciliation tolerance is pure
+    serialization rounding (:data:`_TRACE_US_SLACK`).  The roofline
+    gauge must re-derive from the record's own traffic bytes, recorded
+    median, and hardware model via the same Eq. 2/3/4 arithmetic the
+    live counters use (``repro.obs.counters.roofline_sample``) — a
+    trace cannot publish an achieved bandwidth its own record's numbers
+    don't produce.
+    """
+    tr = dict(rec.trace or {})
+    problems: List[str] = []
+
+    if tr.get("clock") != "wall":
+        problems.append(f"bench trace on clock {tr.get('clock')!r}")
+    spans = int(tr.get("spans", -1))
+    if rec.iters is not None and spans != rec.iters:
+        problems.append(f"{spans} ref spans != {rec.iters} timing iters")
+    med = float(tr.get("span_median_us", -1.0))
+    if abs(med - rec.ref_us_per_call) > _TRACE_US_SLACK:
+        problems.append(f"span median {med:.4g} us != ref_us_per_call "
+                        f"{rec.ref_us_per_call:.4g} us")
+
+    roof = dict(tr.get("roofline") or {})
+    if not roof:
+        problems.append("missing roofline gauge")
+    else:
+        traffic = float(roof.get("traffic_bytes", 0.0))
+        work = float(roof.get("work_flops", 0.0))
+        meas = float(roof.get("measured_us", -1.0))
+        if traffic <= 0.0:
+            problems.append(f"roofline traffic {traffic:.4g} B <= 0")
+        else:
+            if abs(work / traffic - rec.intensity) > \
+                    1e-6 * max(rec.intensity, 1.0):
+                problems.append(
+                    f"roofline W/Q {work / traffic:.4g} != recorded "
+                    f"intensity {rec.intensity:.4g}")
+            if abs(meas - rec.ref_us_per_call) > 1e-3:
+                problems.append(f"roofline measured {meas:.4g} us != "
+                                f"ref_us_per_call "
+                                f"{rec.ref_us_per_call:.4g} us")
+            expect = roofline_sample(
+                KernelTraits(rec.kernel, work, traffic), hw, rec.engine,
+                rec.dtype, rec.ref_us_per_call)
+            for field in ("achieved_gbs", "pct_of_bound",
+                          "pct_of_ceiling"):
+                got = float(roof.get(field, -1.0))
+                want = float(getattr(expect, field))
+                if abs(got - want) > 1e-4 + 1e-6 * abs(want):
+                    problems.append(f"roofline {field} {got:.6g} != "
+                                    f"re-derived {want:.6g}")
+
+    mesh = dict(tr.get("mesh") or {})
+    if rec.mesh_exec:
+        wall = float(dict(rec.mesh_exec).get("mesh_wall_us", 0.0))
+        if not mesh:
+            problems.append("measured-mesh record without mesh trace")
+        else:
+            if int(mesh.get("spans", 0)) < 1:
+                problems.append("no mesh_step spans")
+            if abs(float(mesh.get("mesh_wall_us", -1.0)) - wall) > 1e-6:
+                problems.append(
+                    f"mesh trace wall {mesh.get('mesh_wall_us')!r} != "
+                    f"mesh_exec {wall:.4g} us")
+            m_med = float(mesh.get("span_median_us", -1.0))
+            if abs(m_med - wall) > _TRACE_US_SLACK:
+                problems.append(f"mesh span median {m_med:.4g} us != "
+                                f"mesh_wall_us {wall:.4g} us")
+    elif mesh:
+        problems.append("mesh trace block on a non-mesh record")
+
+    detail = (f"{spans} spans, median {med:.4g} us vs ref "
+              f"{rec.ref_us_per_call:.4g} us, roofline re-derived"
+              + (f"; problems: {'; '.join(problems[:4])}" if problems
+                 else ""))
+    return [ClaimResult("trace_reconciliation", rec, not problems, detail)]
+
+
+def _serving_trace_checks(rec: ServingRecord) -> List[ClaimResult]:
+    """The TRACE_CLAIMS check for one serving record's trace block.
+
+    Two independently-kept accounts of the same virtual timeline — the
+    tracer's spans (emitted inside the serving loop) and the
+    :class:`~repro.serving.scheduler.ServingLog`'s batch tuples — must
+    tell the same story: span count == logged launches, one queue span
+    per completed request, summed span compute == summed logged compute
+    (float-rounding tolerance).  A chaos session's redispatch spans
+    must equal the applied failure count, and every applied
+    failure/resize must have left its instant on the timeline (skipped
+    injections leave none, so the instant count is bounded by the
+    event log's skipped entries).
+    """
+    tr = dict(rec.trace or {})
+    problems: List[str] = []
+
+    if tr.get("clock") != "virtual":
+        problems.append(f"serving trace on clock {tr.get('clock')!r}")
+    batch_spans = int(tr.get("batch_spans", -1))
+    if batch_spans != rec.batches:
+        problems.append(f"{batch_spans} batch spans != {rec.batches} "
+                        f"logged batches")
+    queue_spans = int(tr.get("queue_spans", -1))
+    if queue_spans != rec.completed:
+        problems.append(f"{queue_spans} queue spans != {rec.completed} "
+                        f"completed requests")
+    span_ms = float(tr.get("span_compute_ms", -1.0))
+    log_ms = float(tr.get("log_compute_ms", -2.0))
+    if abs(span_ms - log_ms) > 0.01:
+        problems.append(f"span compute {span_ms:.4g} ms != logged "
+                        f"compute {log_ms:.4g} ms")
+
+    if rec.events:
+        ev = dict(rec.events)
+        fails = int(ev.get("failures", -1))
+        resizes = int(ev.get("resizes", -1))
+        skipped_fails = sum(1 for e in ev.get("log", [])
+                            if str(e.get("kind")) == "fail"
+                            and e.get("skipped"))
+        redis = int(tr.get("redispatch_spans", -1))
+        if redis != fails:
+            problems.append(f"{redis} redispatch spans != {fails} "
+                            f"applied failures")
+        instants = int(tr.get("chaos_instants", -1))
+        # every applied failure was armed by an instant-emitting
+        # injection and every applied resize emitted its instant;
+        # armed-but-skipped failures emit an instant without a log
+        # "applied" entry, so the count may exceed the floor by at
+        # most the skipped-failure tally
+        lo, hi = fails + resizes, fails + skipped_fails + resizes
+        if not lo <= instants <= hi:
+            problems.append(f"{instants} chaos instants outside "
+                            f"[{lo}, {hi}] (failures={fails}, "
+                            f"resizes={resizes}, skipped={skipped_fails})")
+
+    detail = (f"{batch_spans} batch + {queue_spans} queue spans, span "
+              f"compute {span_ms:.4g} ms vs log {log_ms:.4g} ms"
+              + (f"; problems: {'; '.join(problems[:4])}" if problems
+                 else ""))
+    return [ClaimResult("trace_reconciliation", rec, not problems, detail)]
+
+
 def _verdict_checks(rec: ServingRecord,
                     hw: HardwareSpec) -> List[ClaimResult]:
     """The MODEL_CLAIMS check for one lm session's verdict payload.
@@ -532,7 +708,8 @@ def check_record(rec: BenchRecord,
     one result per entry in :data:`SHARD_CLAIMS` — the per-device
     verdict re-checked per shard — and measured real-mesh points
     (schema 6 with ``mesh_exec``) one per entry in
-    :data:`MESH_CLAIMS`.
+    :data:`MESH_CLAIMS`.  Records carrying the observability ``trace``
+    block (schema 7) additionally pass :data:`TRACE_CLAIMS`.
     """
     ceiling, routing, boundedness = _analytic_checks(rec, hw)
 
@@ -545,6 +722,8 @@ def check_record(rec: BenchRecord,
         out.extend(_shard_checks(rec, hw))
     if rec.mesh_exec:
         out.extend(_mesh_checks(rec, hw))
+    if rec.trace:
+        out.extend(_trace_checks(rec, hw))
     return tuple(out)
 
 
@@ -563,7 +742,9 @@ def check_serving_record(rec: ServingRecord,
     classification re-derived and reconciled against the measured
     decode-step wall time — and records carrying a chaos ``events``
     payload (ElasticSession) one per entry in :data:`ELASTIC_CLAIMS`,
-    the failures-move-latency-never-results contract.
+    the failures-move-latency-never-results contract.  Records carrying
+    the observability ``trace`` block (serving schema 5) additionally
+    pass :data:`TRACE_CLAIMS`.
     """
     # Eq. 17/23/24, §6 routing, Eq. 4: the same checks as per-call
     # sweep points, via the shared helper (a record claiming a bigger
@@ -600,6 +781,8 @@ def check_serving_record(rec: ServingRecord,
         results.extend(_verdict_checks(rec, hw))
     if rec.events:
         results.extend(_elastic_checks(rec, hw))
+    if rec.trace:
+        results.extend(_serving_trace_checks(rec))
     return tuple(results)
 
 

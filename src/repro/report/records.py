@@ -25,7 +25,15 @@ into typed rows.  Five file schemas are accepted:
   (one ``shard_map`` step over N actual XLA devices — mesh wall µs,
   the ppermute halo exchange's own collective µs, the virtual-clock
   analogue µs, their skew, and the real-mesh max error vs. the
-  oracle), null for single-device and virtual-mesh points.
+  oracle), null for single-device and virtual-mesh points,
+* schema 7 (bench) / schema 5 (serving) -- the previous schema plus
+  the optional per-record ``trace`` block: the :mod:`repro.obs`
+  tracer's independent account of the same measurement (span counts,
+  span-median µs, roofline counters — achieved GB/s, percent of the
+  Eq. 4 bound and Eq. 3/23/24 ceiling) that the
+  ``trace_reconciliation`` claim re-verifies against the record's own
+  numbers.  From here on ``kind`` is read from the payload's ``kind``
+  field (absent = bench) rather than inferred from the version.
 
 Bench records are (kernel, engine, size, dtype) sweep points carrying
 the measured reference time, the max error vs. the oracle, and the
@@ -37,7 +45,7 @@ fields so §6 routing is re-checked *under load* too.
 from __future__ import annotations
 
 import dataclasses
-import glob
+import fnmatch
 import json
 import os
 from typing import Any, Mapping, Optional, Tuple, Union
@@ -85,6 +93,10 @@ class BenchRecord:
     # "devices": N, "mesh_wall_us", "collective_us", "virtual_us",
     # "skew", "mesh_max_err", ...}); None = no real-mesh run
     mesh_exec: Optional[Mapping[str, Any]] = None
+    # schema 7: the obs tracer's reconciliation block ({"clock":
+    # "wall", "spans", "span_median_us", roofline counters, optional
+    # "mesh" sub-block}); None = swept without tracing
+    trace: Optional[Mapping[str, Any]] = None
 
     @property
     def num_shards(self) -> int:
@@ -214,6 +226,10 @@ class ServingRecord:
     # "log": [...]}) the elastic_integrity claim re-verifies; None for
     # ordinary sessions
     events: Optional[Mapping[str, Any]] = None
+    # serving schema 5: the obs tracer's reconciliation block
+    # ({"clock": "virtual", "batch_spans", "span_compute_ms",
+    # "log_compute_ms", chaos instant counts}); None = legacy session
+    trace: Optional[Mapping[str, Any]] = None
 
     @property
     def point(self) -> Tuple[str, str, str, int, str, int]:
@@ -295,6 +311,7 @@ def _to_record(raw: Mapping[str, Any], path: str) -> BenchRecord:
             raise ValueError(f"{path}: mesh_exec must be an object "
                              f"with {needed} fields, got {mesh_exec!r}")
         mesh_exec = dict(mesh_exec)
+    trace = _check_trace(raw.get("trace"), path)
     return BenchRecord(
         kernel=str(raw["kernel"]),
         engine=str(raw["engine"]),
@@ -316,7 +333,18 @@ def _to_record(raw: Mapping[str, Any], path: str) -> BenchRecord:
         mesh_shape=mesh_shape,
         shard_spec=shard_spec,
         mesh_exec=mesh_exec,
+        trace=trace,
     )
+
+
+def _check_trace(trace: Any, path: str) -> Optional[dict]:
+    """Validate a record's optional ``trace`` reconciliation block."""
+    if trace is None:
+        return None
+    if not isinstance(trace, Mapping) or "clock" not in trace:
+        raise ValueError(f"{path}: trace must be an object with a "
+                         f"'clock' field, got {trace!r}")
+    return dict(trace)
 
 
 def _to_serving_record(raw: Mapping[str, Any], path: str) -> ServingRecord:
@@ -345,6 +373,7 @@ def _to_serving_record(raw: Mapping[str, Any], path: str) -> ServingRecord:
             raise ValueError(f"{path}: events must be an object with "
                              f"a 'log' list, got {events!r}")
         events = dict(events)
+    trace = _check_trace(raw.get("trace"), path)
     return ServingRecord(
         kernel=str(raw["kernel"]),
         engine=str(raw["engine"]),
@@ -382,19 +411,21 @@ def _to_serving_record(raw: Mapping[str, Any], path: str) -> ServingRecord:
         phases=(dict(phases) if phases is not None else None),
         verdict=verdict,
         events=events,
+        trace=trace,
         **{k: (float(v) if v is not None else None)
            for k, v in opt.items()},
     )
 
 
 def load_file(path: str) -> RecordSet:
-    """Parse one BENCH_*.json (schema 1-6) into a RecordSet.
+    """Parse one BENCH_*.json (schema 1-7) into a RecordSet.
 
-    Schema 4 payloads (``"kind": "serving"``) load as
-    :class:`ServingRecord` rows; earlier schemas as
-    :class:`BenchRecord` sweep points.  Raises ``ValueError`` on
-    unknown schema versions or records missing the fields the claim
-    checks (Eq. 23/24 ceiling, §6 routing) need.
+    Payloads with ``"kind": "serving"`` (every serving schema; plain
+    schema-4 payloads default to it) load as :class:`ServingRecord`
+    rows; everything else as :class:`BenchRecord` sweep points.
+    Raises ``ValueError`` on unknown schema versions or records
+    missing the fields the claim checks (Eq. 23/24 ceiling, §6
+    routing) need.
     """
     with open(path) as f:
         payload = json.load(f)
@@ -403,14 +434,17 @@ def load_file(path: str) -> RecordSet:
         schema, env, raw_records = 1, {}, payload
     elif isinstance(payload, dict):
         schema = int(payload.get("schema", 0))
-        if schema not in (2, 3, 4, 5, 6):
+        if schema not in (2, 3, 4, 5, 6, 7):
             raise ValueError(f"{path}: unsupported schema {schema!r} "
-                             f"(expected 1-list, 2, 3, 4, 5, or 6)")
-        if schema == 4:
-            kind = str(payload.get("kind", "serving"))
-            if kind != "serving":
-                raise ValueError(f"{path}: schema-4 payload has unknown "
-                                 f"kind {kind!r} (expected 'serving')")
+                             f"(expected 1-list, or 2-7)")
+        # schema 4 was serving-only, so a missing kind means serving
+        # there; later schemas carry the kind explicitly (bench and
+        # serving version numbers advance independently)
+        kind = str(payload.get("kind",
+                               "serving" if schema == 4 else "bench"))
+        if kind not in ("bench", "serving"):
+            raise ValueError(f"{path}: unknown kind {kind!r} "
+                             f"(expected 'bench' or 'serving')")
         env = dict(payload.get("env", {}))
         raw_records = payload.get("records")
         if not isinstance(raw_records, list):
@@ -435,10 +469,28 @@ def load_dir(runs_dir: str = "runs") -> Tuple[RecordSet, ...]:
     (kernel, kind, mesh) — a family's single-device bench sweep sorts
     before its mesh sweeps, which sort before its serving sessions.
 
+    Ingestion is explicit about what it skips: ``TRACE_*.json``
+    companions (Chrome-trace exports living next to their records) are
+    silently ignored, and any *other* stray file in the record
+    directory gets a structured warning (``repro.obs.log``) instead of
+    being invisibly passed over by glob luck.
+
     This is the measurement half of the paper's measure-vs-theory loop;
     the returned sets feed ``repro.report.claims.check_records``.
     """
-    paths = sorted(glob.glob(os.path.join(runs_dir, "BENCH_*.json")))
+    from ..obs.log import LOG
+    paths = []
+    for name in sorted(os.listdir(runs_dir)):
+        full = os.path.join(runs_dir, name)
+        if not os.path.isfile(full):
+            continue
+        if fnmatch.fnmatch(name, "BENCH_*.json"):
+            paths.append(full)
+        elif fnmatch.fnmatch(name, "TRACE_*.json"):
+            continue  # trace artifacts ride along with their records
+        else:
+            LOG.warning("skipping non-record file in record directory",
+                        dir=runs_dir, file=name)
     if not paths:
         raise FileNotFoundError(f"no BENCH_*.json files under {runs_dir!r}")
     sets = tuple(sorted((load_file(p) for p in paths),

@@ -26,13 +26,14 @@ import json
 import os
 import shutil
 import threading
-import warnings
 import zipfile
 from pathlib import Path
 from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
+
+from ..obs.log import LOG
 
 __all__ = ["AsyncCheckpointer", "checkpoint_meta", "latest_step",
            "prune_old", "restore", "save"]
@@ -112,9 +113,10 @@ def restore(ckpt_dir: str | Path, template: Pytree, step: Optional[int] = None,
     pass a different mesh's shardings to elastically re-shard.
 
     With ``step=None`` (resume-from-newest), a corrupt step on disk is
-    skipped with a ``RuntimeWarning`` and the next older complete step
-    is tried — same warn-and-fall-back contract as the tuning cache.
-    An explicit ``step`` is strict and raises on corruption.
+    skipped with a ``repro.obs.log`` warning record and the next older
+    complete step is tried — same warn-and-fall-back contract as the
+    tuning cache.  An explicit ``step`` is strict and raises on
+    corruption.
     """
     ckpt_dir = Path(ckpt_dir)
     if step is not None:
@@ -127,10 +129,10 @@ def restore(ckpt_dir: str | Path, template: Pytree, step: Optional[int] = None,
         try:
             return _restore_step(ckpt_dir, template, s, shardings)
         except _CORRUPT as err:
-            warnings.warn(
-                f"checkpoint step_{s:08d} under {ckpt_dir} is unreadable "
-                f"({type(err).__name__}: {err}); falling back to the "
-                f"previous complete step", RuntimeWarning, stacklevel=2)
+            LOG.warning(
+                "checkpoint unreadable; falling back to the previous "
+                "complete step", step=f"step_{s:08d}", dir=str(ckpt_dir),
+                error=f"{type(err).__name__}: {err}")
             last_err = err
     raise FileNotFoundError(
         f"no readable checkpoint under {ckpt_dir} "

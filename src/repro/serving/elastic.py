@@ -57,6 +57,8 @@ import numpy as np
 
 from ..core.dispatch import DEFAULT_DISPATCHER, Dispatcher, normalize_engine
 from ..kernels import registry
+from ..obs.trace import TRACER
+from ..obs.trace import capture as trace_capture
 from ..runtime import checkpoint as ckpt
 from ..runtime.elastic import mesh_transition_plan
 from ..sharding import ShardedExecutor
@@ -65,7 +67,7 @@ from .batcher import KernelBatchExecutor
 from .loadgen import make_loadgen
 from .metrics import ServingSummary, serving_record, summarize
 from .requests import RequestResult
-from .scheduler import ContinuousBatchingScheduler, ServingLog
+from .scheduler import ContinuousBatchingScheduler, ServingLog, trace_payload
 from .slo import availability
 
 __all__ = ["AVAILABILITY_TARGET", "ChaosEvent", "ChaosInjector",
@@ -458,6 +460,9 @@ class ElasticSession:
             "tp_change": plan["tp_change"],
             "reshard_exact": bool(reshard_exact),
         })
+        TRACER.instant("resize", layer="elastic", at_s=round(float(at_s), 6),
+                       src=int(old_w), dst=int(new_w), reason=reason,
+                       reshard_exact=bool(reshard_exact))
         return new_exec, new_w
 
     # -- the elastic serving loop ------------------------------------------
@@ -525,6 +530,9 @@ class ElasticSession:
                     ei += 1
                     if ev.kind == "fail":
                         executor.inject_failure(ev.shard)
+                        TRACER.instant("chaos_fail", layer="elastic",
+                                       at_s=round(float(ev.at_s), 6),
+                                       shard=int(ev.shard))
                     else:
                         executor, width = self._resize(
                             executor, width, ev.width, "injected",
@@ -579,6 +587,10 @@ class ElasticSession:
                         "recovery_ms": round(rep["recovery_s"] * 1e3, 3),
                         "redispatch_exact": rep["exact"],
                     })
+                    TRACER.virtual(
+                        "redispatch", layer="elastic", start_s=start,
+                        dur_s=rep["recovery_s"], shard=rep["shard"],
+                        batch_id=batch_id, exact=rep["exact"])
                     if width > self.min_shards:
                         # the dead shard leaves the mesh: drain to the
                         # surviving width until pressure regrows it
@@ -588,7 +600,15 @@ class ElasticSession:
                         last_resize = finish
                 batches.append((batch_id, key, len(batch), start,
                                 compute_s, execution.engine))
+                TRACER.virtual("batch", layer="serving", start_s=start,
+                               dur_s=compute_s, batch_id=batch_id,
+                               key=list(key), n=len(batch),
+                               engine=execution.engine, shards=width)
                 for req in batch:
+                    TRACER.virtual("queue", layer="serving",
+                                   start_s=req.arrival_s,
+                                   dur_s=start - req.arrival_s,
+                                   rid=req.rid, batch_id=batch_id)
                     result = RequestResult(
                         request=req, start_s=start, finish_s=finish,
                         batch_id=batch_id, batch_size=len(batch),
@@ -659,7 +679,17 @@ class ElasticSession:
         base_log = self.serve(chaos=False)
         base_summary = summarize(base_log, cfg.slo)
         base_checksum = self.checksum()
-        log = self.serve(chaos=True)
+        with trace_capture() as view:
+            log = self.serve(chaos=True)
+        trace = trace_payload(view.events, log)
+        # the chaos leg's extra timeline marks, reconciled against the
+        # events block: every recorded failure/resize must have its
+        # instant on the virtual clock
+        trace["chaos_instants"] = sum(
+            1 for e in view.events
+            if e.kind == "instant" and e.layer == "elastic")
+        trace["redispatch_spans"] = sum(
+            1 for e in view.events if e.name == "redispatch")
         summary = summarize(log, cfg.slo)
         fail_events = [e for e in self.events if e["kind"] == "fail"
                        and not e.get("skipped")]
@@ -701,7 +731,7 @@ class ElasticSession:
             max_wait_ms=cfg.policy.max_wait_s * 1e3,
             num_shards=cfg.num_shards,
             mesh_exec_mode=("virtual" if cfg.num_shards > 1 else None),
-            events=events_block)
+            events=events_block, trace=trace)
         return log, summary, record
 
     # -- checkpoint / restore ----------------------------------------------

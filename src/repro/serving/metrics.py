@@ -133,6 +133,7 @@ def serving_record(summary: ServingSummary, *, kernel: str, engine: str,
                    phases: Optional[Dict] = None,
                    verdict: Optional[Dict] = None,
                    events: Optional[Dict] = None,
+                   trace: Optional[Dict] = None,
                    results: Optional[Sequence[RequestResult]] = None,
                    ) -> Dict:
     """One schema-4 serving record: summary + analytic join fields.
@@ -163,6 +164,11 @@ def serving_record(summary: ServingSummary, *, kernel: str, engine: str,
     ``elastic_integrity`` claim re-verifies.  None for ordinary
     sessions, and then absent from the record (event-less records keep
     the pre-elastic claim set).
+
+    ``trace`` is the observability reconciliation block (see
+    :func:`repro.serving.scheduler.trace_payload`): the tracer's
+    independent account of the virtual timeline, checked against this
+    record by the ``trace_reconciliation`` claim.
     """
     del results  # per-request samples stay in-process; records are sums
     return {
@@ -170,6 +176,7 @@ def serving_record(summary: ServingSummary, *, kernel: str, engine: str,
         **({"phases": dict(phases)} if phases is not None else {}),
         **({"verdict": dict(verdict)} if verdict is not None else {}),
         **({"events": dict(events)} if events is not None else {}),
+        **({"trace": dict(trace)} if trace is not None else {}),
         "num_shards": int(num_shards),
         "mesh_exec_mode": (str(mesh_exec_mode)
                            if mesh_exec_mode is not None else None),

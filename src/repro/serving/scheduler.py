@@ -30,11 +30,38 @@ import heapq
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
 
+from ..obs.trace import TRACER
 from .loadgen import LoadGen
 from .requests import Request, RequestResult
 
 __all__ = ["BatchExecution", "BatchPolicy", "ContinuousBatchingScheduler",
-           "ServingLog"]
+           "ServingLog", "trace_payload"]
+
+
+def trace_payload(events, log: "ServingLog") -> Dict:
+    """The record's ``trace`` reconciliation block for one session.
+
+    Two independently-kept accounts of the same virtual timeline: the
+    tracer's batch spans (emitted inside the serving loop) and the
+    :class:`ServingLog`'s batch tuples.  The ``trace_reconciliation``
+    claim proves they agree — span count == logged launches, summed
+    span compute == summed logged compute (within float-rounding
+    tolerance) — so a trace that drifts from the evidence it narrates
+    turns the report red.
+    """
+    batch_spans = [e for e in events
+                   if e.clock == "virtual" and e.name == "batch"]
+    queue_spans = [e for e in events
+                   if e.clock == "virtual" and e.name == "queue"]
+    span_compute_ms = sum(e.dur_us for e in batch_spans) / 1e3
+    log_compute_ms = sum(b[4] for b in log.batches) * 1e3
+    return {
+        "clock": "virtual",
+        "batch_spans": len(batch_spans),
+        "queue_spans": len(queue_spans),
+        "span_compute_ms": round(span_compute_ms, 3),
+        "log_compute_ms": round(log_compute_ms, 3),
+    }
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,6 +156,8 @@ class ContinuousBatchingScheduler:
         while pending and pending[0][0] <= clock:
             _, _, req = heapq.heappop(pending)
             queues.setdefault(req.batch_key, deque()).append(req)
+            TRACER.instant("admit", layer="serving", at_s=req.arrival_s,
+                           rid=req.rid, key=list(req.batch_key))
 
     def _ready_key(self, queues: Dict, clock: float, draining: bool):
         """The oldest-head queue that a trigger has fired for, if any."""
@@ -190,7 +219,18 @@ class ContinuousBatchingScheduler:
             start, finish = clock, clock + execution.compute_s
             batches.append((batch_id, key, len(batch), start,
                             execution.compute_s, execution.engine))
+            # the virtual-clock timeline: one batch span per launch,
+            # one queue span per member (arrival -> launch wait)
+            TRACER.virtual("batch", layer="serving", start_s=start,
+                           dur_s=execution.compute_s, batch_id=batch_id,
+                           key=list(key), n=len(batch),
+                           engine=execution.engine,
+                           shards=execution.shards)
             for req in batch:
+                TRACER.virtual("queue", layer="serving",
+                               start_s=req.arrival_s,
+                               dur_s=start - req.arrival_s,
+                               rid=req.rid, batch_id=batch_id)
                 result = RequestResult(
                     request=req, start_s=start, finish_s=finish,
                     batch_id=batch_id, batch_size=len(batch),

@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional, Tuple
 
+from ..obs.trace import capture as trace_capture
 from .batcher import KernelBatchExecutor
 # re-exported here so the fault-tolerance surface is reachable from the
 # session module (the orchestration layer callers already import):
@@ -20,7 +21,8 @@ from .batcher import KernelBatchExecutor
 from .elastic import checkpoint_session, redispatch_failed_shard
 from .loadgen import LoadGen, make_loadgen
 from .metrics import ServingSummary, serving_record, summarize
-from .scheduler import BatchPolicy, ContinuousBatchingScheduler, ServingLog
+from .scheduler import (BatchPolicy, ContinuousBatchingScheduler,
+                        ServingLog, trace_payload)
 from .slo import SLO, DEFAULT_SLO
 
 __all__ = ["SessionConfig", "checkpoint_session",
@@ -73,7 +75,9 @@ def run_session(cfg: SessionConfig, executor=None,
                               dtype=cfg.dtype, seed=cfg.seed,
                               trace_path=cfg.trace_path)
     scheduler = ContinuousBatchingScheduler(executor, cfg.policy)
-    log = scheduler.run(source, cfg.duration_s)
+    with trace_capture() as view:
+        log = scheduler.run(source, cfg.duration_s)
+    trace = trace_payload(view.events, log)
     summary = summarize(log, cfg.slo)
     advice = executor.advice_for(cfg.kernel, cfg.size, cfg.dtype)
     # an idle session still records the engine it *would* have run:
@@ -102,5 +106,5 @@ def run_session(cfg: SessionConfig, executor=None,
         mesh_exec_mode=(("mesh" if cfg.real_mesh else "virtual")
                         if cfg.num_shards > 1 else None),
         model=extras.get("model"), phases=extras.get("phases"),
-        verdict=extras.get("verdict"))
+        verdict=extras.get("verdict"), trace=trace)
     return log, summary, record

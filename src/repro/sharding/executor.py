@@ -35,6 +35,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..core.dispatch import DEFAULT_DISPATCHER, Dispatcher, default_cache_key
 from ..core.timing import time_fn
+from ..obs.trace import TRACER
 from ..launch.mesh import data_mesh, make_auto_mesh, mesh_context
 from .collective_matmul import rowparallel_matmul, weight_gathered_matmul
 from .plan import (ShardPlan, combine_outputs, first_array, plan_for,
@@ -128,20 +129,28 @@ class ShardedExecutor:
             plan = self.plan(op, *args, **kwargs)
         dispatcher = self._shard_dispatcher()
         outputs, times = [], []
-        with mesh_context(self.mesh()):
-            for shard in plan.shards:
-                sargs, skw = shard_call(plan, shard, args, kwargs)
-                t0 = time.perf_counter()
-                out = dispatcher.run(op, *sargs, engine=eng,
-                                     interpret=self.interpret,
-                                     **skw)
-                jax.block_until_ready(out)
-                times.append(time.perf_counter() - t0)
-                outputs.append(out)
-        template = None
-        if plan.spec.kind == "data":
-            template = first_array(args)
-        combined = combine_outputs(plan, outputs, template=template)
+        with TRACER.span("shard_run", layer="mesh", kernel=op.name,
+                         kind=plan.spec.kind, shards=len(plan.shards)):
+            with mesh_context(self.mesh()):
+                for i, shard in enumerate(plan.shards):
+                    sargs, skw = shard_call(plan, shard, args, kwargs)
+                    t0 = time.perf_counter()
+                    out = dispatcher.run(op, *sargs, engine=eng,
+                                         interpret=self.interpret,
+                                         **skw)
+                    jax.block_until_ready(out)
+                    dt = time.perf_counter() - t0
+                    # emitted with the measured times: span == sample
+                    TRACER.emit("shard", layer="mesh", start_s=t0,
+                                dur_s=dt, kernel=op.name, shard=i)
+                    times.append(dt)
+                    outputs.append(out)
+            template = None
+            if plan.spec.kind == "data":
+                template = first_array(args)
+            with TRACER.span("reassembly", layer="mesh", kernel=op.name):
+                combined = combine_outputs(plan, outputs,
+                                           template=template)
         return ShardRun(out=combined, plan=plan,
                         shard_seconds=tuple(times))
 
@@ -494,14 +503,20 @@ class MeshExecutor:
         if plan is None:
             plan = self.plan(op, *args, **kwargs)
         low = self._lowered(op, plan, args, kwargs)
-        prepared = low.prep(args)
-        if not low.warmed:
-            jax.block_until_ready(low.fn(*prepared))
-            low.warmed = True
-        t0 = time.perf_counter()
-        out = low.fn(*prepared)
-        jax.block_until_ready(out)
-        wall = time.perf_counter() - t0
+        with TRACER.span("mesh_run", layer="mesh", kernel=op.name,
+                         devices=self.num_shards, kind=plan.spec.kind):
+            with TRACER.span("pad_prep", layer="mesh", kernel=op.name):
+                prepared = low.prep(args)
+            if not low.warmed:
+                with TRACER.span("warmup", layer="mesh", kernel=op.name):
+                    jax.block_until_ready(low.fn(*prepared))
+                low.warmed = True
+            t0 = time.perf_counter()
+            out = low.fn(*prepared)
+            jax.block_until_ready(out)
+            wall = time.perf_counter() - t0
+            TRACER.emit("mesh_step", layer="mesh", start_s=t0, dur_s=wall,
+                        kernel=op.name, devices=low.width)
         return MeshRun(out=low.post(out), plan=plan, devices=low.width,
                        wall_s=wall)
 
@@ -525,29 +540,38 @@ class MeshExecutor:
         if plan is None:
             plan = self.plan(op, *args, **kwargs)
         low = self._lowered(op, plan, args, kwargs)
-        prepared = low.prep(args)
-        t_mesh = time_fn(lambda: low.fn(*prepared))
-        low.warmed = True
-        collective_us = 0.0
-        if low.collective is not None:
-            collective_us = time_fn(
-                lambda: low.collective(*prepared)).median_us
-        shard_us = []
-        for shard in plan.shards:
-            sa, skw = shard_call(plan, shard, args, kwargs)
-            arr_idx = [i for i, x in enumerate(sa) if _is_arrayish(x)]
-            statics = tuple(sa)
+        with TRACER.span("mesh_measure", layer="mesh", kernel=op.name,
+                         devices=self.num_shards, kind=plan.spec.kind):
+            with TRACER.span("pad_prep", layer="mesh", kernel=op.name):
+                prepared = low.prep(args)
+            t_mesh = time_fn(lambda: low.fn(*prepared),
+                             label="mesh_step", layer="mesh",
+                             kernel=op.name, devices=self.num_shards)
+            low.warmed = True
+            collective_us = 0.0
+            if low.collective is not None:
+                collective_us = time_fn(
+                    lambda: low.collective(*prepared),
+                    label="collective", layer="mesh",
+                    kernel=op.name, devices=self.num_shards).median_us
+            shard_us = []
+            for shard_idx, shard in enumerate(plan.shards):
+                sa, skw = shard_call(plan, shard, args, kwargs)
+                arr_idx = [i for i, x in enumerate(sa) if _is_arrayish(x)]
+                statics = tuple(sa)
 
-            def local(*arrs, _statics=statics, _idx=tuple(arr_idx),
-                      _kw=skw):
-                call = list(_statics)
-                for i, a in zip(_idx, arrs):
-                    call[i] = a
-                return op.reference(*call, **_kw)
+                def local(*arrs, _statics=statics, _idx=tuple(arr_idx),
+                          _kw=skw):
+                    call = list(_statics)
+                    for i, a in zip(_idx, arrs):
+                        call[i] = a
+                    return op.reference(*call, **_kw)
 
-            fn = jax.jit(local)
-            arrs = tuple(sa[i] for i in arr_idx)
-            shard_us.append(time_fn(lambda: fn(*arrs)).median_us)
+                fn = jax.jit(local)
+                arrs = tuple(sa[i] for i in arr_idx)
+                shard_us.append(time_fn(
+                    lambda: fn(*arrs), label="shard_ref", layer="mesh",
+                    kernel=op.name, shard=shard_idx).median_us)
         virtual_us = max(shard_us) if shard_us else 0.0
         return {
             "mode": "mesh",

@@ -49,7 +49,7 @@ def test_time_fn_returns_median_iqr_iters():
     assert t.iters == 7
 
 
-def test_write_json_schema6(tmp_path):
+def test_write_json_schema7(tmp_path):
     recs = [{"kernel": "demo", "engine": "vector", "size": 8,
              "dtype": "float32", "ref_us_per_call": 1.0,
              "tile_config": None, "mesh_shape": None,
@@ -57,7 +57,7 @@ def test_write_json_schema6(tmp_path):
     env = bench_env(interpret=True, hw_model="TPU-v5e")
     path = write_json("demo", recs, out_dir=str(tmp_path), env=env)
     payload = json.loads(open(path).read())
-    assert payload["schema"] == SCHEMA_VERSION == 6
+    assert payload["schema"] == SCHEMA_VERSION == 7
     assert payload["kernel"] == "demo"
     assert payload["records"] == recs
     for key in ("jax", "numpy", "device", "interpret", "hw_model"):

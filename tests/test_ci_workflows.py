@@ -47,7 +47,7 @@ def test_ci_matrix_split():
     wf = _load("ci.yml")
     jobs = wf["jobs"]
     assert set(jobs) == {"lint-unit", "mesh-smoke", "lm-smoke",
-                         "chaos-smoke", "slow"}
+                         "chaos-smoke", "trace-smoke", "slow"}
 
     lint = jobs["lint-unit"]
     matrix = lint["strategy"]["matrix"]["python-version"]
@@ -171,6 +171,27 @@ def test_ci_chaos_smoke_job():
     uploads = [s for s in job["steps"]
                if "upload-artifact" in s.get("uses", "")]
     assert uploads and "runs-ci-chaos" in uploads[0]["with"]["path"]
+
+
+def test_ci_trace_smoke_job():
+    """The observability smoke: fresh Chrome-trace exports from both
+    clocks — a --trace kernel sweep (wall spans + roofline counters)
+    and a --trace-out chaos serve under the committed adversary
+    (virtual spans) — validated by the repro.obs.trace CLI and
+    uploaded as artifacts."""
+    job = _load("ci.yml")["jobs"]["trace-smoke"]
+    runs = _run_text(job)
+    assert "--trace trace-sweep.json" in runs
+    assert "--trace-out trace-chaos.json" in runs
+    # the chaos timeline must replay the committed adversary
+    assert '--chaos "fail@0.6:1,resize@1.1:4,resize@1.6:2"' in runs
+    assert ("python -m repro.obs.trace trace-sweep.json "
+            "trace-chaos.json") in runs
+    uploads = [s for s in job["steps"]
+               if "upload-artifact" in s.get("uses", "")]
+    assert uploads and uploads[0].get("if") == "always()"
+    path = uploads[0]["with"]["path"]
+    assert "trace-sweep.json" in path and "trace-chaos.json" in path
 
 
 def test_ci_model_tier_named_step():

@@ -274,15 +274,20 @@ def test_async_checkpointer_surfaces_writer_errors(tmp_path):
 
 
 def test_corrupt_checkpoint_falls_back_with_warning(tmp_path):
-    """Resume-from-newest skips an unreadable step with a warning and
-    restores the previous complete one; naming the corrupt step
-    explicitly stays strict."""
+    """Resume-from-newest skips an unreadable step with a structured
+    warning record and restores the previous complete one; naming the
+    corrupt step explicitly stays strict."""
+    from repro.obs.log import LOG
+
     tree = {"x": jnp.arange(4.0)}
     ckpt.save(tmp_path, 1, tree)
     ckpt.save(tmp_path, 2, jax.tree.map(lambda x: x * 10, tree))
     (tmp_path / "step_00000002" / "arrays.npz").write_bytes(b"garbage")
-    with pytest.warns(RuntimeWarning, match="unreadable"):
+    with LOG.capture() as records:
         restored = ckpt.restore(tmp_path, tree)
+    warned = [r for r in records
+              if r.level == "warning" and "unreadable" in r.msg]
+    assert warned and warned[0].fields["step"] == "step_00000002"
     assert np.array_equal(np.asarray(restored["x"]), np.arange(4.0))
     with pytest.raises(Exception):
         ckpt.restore(tmp_path, tree, step=2)  # explicit step: strict

@@ -55,9 +55,9 @@ def test_load_committed_runs_schema6():
     mesh_points = 0
     for s in sets:
         if s.kind == "serving":
-            assert s.schema == 4  # serving sessions live in schema 4
+            assert s.schema == 5  # serving sessions live in schema 5
             continue
-        assert s.schema == 6
+        assert s.schema == 7
         assert "jax" in s.env and "device" in s.env
         assert s.env["interpret"] is True
         for rec in s.records:

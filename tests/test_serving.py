@@ -433,7 +433,7 @@ def test_chaos_replay_is_deterministic(tmp_path):
     """Two elastic sessions under the identical seeded adversary replay
     the same events, the same checksums, and the same record — and the
     ingested record passes every serving claim plus elastic_integrity."""
-    from repro.report.claims import ELASTIC_CLAIMS
+    from repro.report.claims import ELASTIC_CLAIMS, TRACE_CLAIMS
     from repro.serving import ChaosInjector, ElasticSession
 
     def _session():
@@ -472,7 +472,8 @@ def test_chaos_replay_is_deterministic(tmp_path):
     path = write_serving_json("scale", [rec1], str(tmp_path), mesh=2)
     rec = load_file(path).records[0]
     results = check_serving_record(rec)
-    assert tuple(r.claim for r in results) == SERVING_CLAIMS + ELASTIC_CLAIMS
+    assert (tuple(r.claim for r in results)
+            == SERVING_CLAIMS + ELASTIC_CLAIMS + TRACE_CLAIMS)
     assert all(r.passed for r in results)
 
 
