@@ -128,7 +128,8 @@ def write_json(kernel: str, records: List[dict], out_dir: str = "runs",
 
 def write_serving_json(kernel: str, records: List[dict],
                        out_dir: str = "runs",
-                       env: Optional[dict] = None, mesh: int = 1) -> str:
+                       env: Optional[dict] = None, mesh: int = 1,
+                       suffix: str = "") -> str:
     """Write one kernel's serving sessions to BENCH_serve_<kernel>.json.
 
     Schema 5: ``{"schema": 5, "kind": "serving", "kernel": ..., "env":
@@ -138,10 +139,12 @@ def write_serving_json(kernel: str, records: List[dict],
     ``benchmarks/compare.py --kind serving``.  Mesh sessions
     (``mesh > 1``) land in ``BENCH_serve_<kernel>_mesh<N>.json`` beside
     the single-device baseline instead of clobbering it, mirroring the
-    bench-sweep convention.
+    bench-sweep convention; *suffix* (e.g. ``"_online"`` for
+    ``serve --online-tune`` sessions) keeps other session variants
+    separate the same way.
     """
-    name = (f"BENCH_serve_{kernel}.json" if mesh <= 1
-            else f"BENCH_serve_{kernel}_mesh{mesh}.json")
+    name = (f"BENCH_serve_{kernel}{suffix}.json" if mesh <= 1
+            else f"BENCH_serve_{kernel}{suffix}_mesh{mesh}.json")
     return _write_record_file(name, kernel, SERVING_SCHEMA_VERSION,
                               records, out_dir, env,
                               extra={"kind": "serving"})

@@ -12,9 +12,10 @@ flatten/pad/tile/unpad plumbing around ``pallas_call``, and (3) the
     re-derivation.
   * ``TuningPolicy`` -- consults a versioned ``tuned.json`` cache
     (``repro.tuning.cache``) for the winning tile configuration per
-    (kernel, engine, dtype, hardware model) before falling back to the
-    static tile defaults, so the vector-engine baseline the paper's
-    Eq. 23/24 ceiling is checked against is the *bandwidth-tuned* one.
+    (kernel, engine, dtype, hardware model, shard shape) before falling
+    back to the static tile defaults, so the vector-engine baseline the
+    paper's Eq. 23/24 ceiling is checked against is the
+    *bandwidth-tuned* one.
   * ``elementwise_call`` -- the shared flatten/pad/tile/unpad wrapper and
     block-spec construction for same-shape elementwise kernels (SCALE,
     STREAM Triad, AXPY, ...): a kernel family supplies only its per-tile
@@ -166,12 +167,20 @@ class TuningPolicy:
         self._resolved = True
 
     def lookup(self, kernel: str, engine: str, dtype: Optional[str],
-               hw_model: str):
-        """The TunedEntry for this key, or None (use static defaults)."""
+               hw_model: str, num_shards: int = 1):
+        """The TunedEntry for this key, or None (use static defaults).
+
+        ``num_shards`` scopes the lookup to the launch width via the
+        cache's ``shard_shape`` key component: a sharded launch only
+        ever sees per-shard winners, never the full-width tile
+        (the schema-1 collision the 5-field key fixed).
+        """
         cache = self.cache
         if cache is None or dtype is None:
             return None
-        return cache.lookup(kernel, engine, dtype, hw_model)
+        from ..tuning.cache import shard_shape_of
+        return cache.lookup(kernel, engine, dtype, hw_model,
+                            shard_shape_of(num_shards))
 
 
 _MESH_MODES = ("virtual", "mesh")
@@ -274,7 +283,8 @@ class Dispatcher:
             advice = self.advisor.advise(op.traits(*args, **kwargs))
             entry = self.tuning.lookup(op.name, advice.engine,
                                        _dtype_of(args, kwargs),
-                                       self.hw.name)
+                                       self.hw.name,
+                                       num_shards=self._mesh_shards)
             if entry is not None:
                 advice = dataclasses.replace(
                     advice,
@@ -321,11 +331,12 @@ class Dispatcher:
         """The tuned tile params this call would use, or None (defaults).
 
         Consults the TuningPolicy with the op's name, the resolved
-        engine, the call's dtype, and the advisor's hardware model --
-        the granularity winners are cached at.
+        engine, the call's dtype, the advisor's hardware model, and the
+        current mesh width -- the granularity winners are cached at.
         """
         entry = self.tuning.lookup(op.name, eng, _dtype_of(args, kwargs),
-                                   self.hw.name)
+                                   self.hw.name,
+                                   num_shards=self._mesh_shards)
         return dict(entry.params) if entry is not None else None
 
     def run(self, op, *args, engine: str = "auto", interpret: bool = True,

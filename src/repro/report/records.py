@@ -230,19 +230,36 @@ class ServingRecord:
     # ({"clock": "virtual", "batch_spans", "span_compute_ms",
     # "log_compute_ms", chaos instant counts}); None = legacy session
     trace: Optional[Mapping[str, Any]] = None
+    # online-tuned sessions only: the bandit + router block ({"mode":
+    # "online", "budget", "keys": {key: {arms, events, ...}}, optional
+    # "router"}) whose decisions the online_ceiling claim replays
+    # against Eq. 23/24; None for statically-tuned sessions
+    tuning: Optional[Mapping[str, Any]] = None
 
     @property
-    def point(self) -> Tuple[str, str, str, int, str, int]:
-        """Session key (kernel, engine, workload, size, dtype, shards)
-        — what the ``benchmarks/compare.py`` p99/goodput gate joins on.
+    def tuning_mode(self) -> str:
+        """'online' when the session carried a tuning block, else
+        'static' — part of the session key so an adaptively-tuned p99
+        never gates against a statically-tuned baseline."""
+        if not self.tuning:
+            return "static"
+        return str(self.tuning.get("mode", "online"))
+
+    @property
+    def point(self) -> Tuple[str, str, str, int, str, int, str]:
+        """Session key (kernel, engine, workload, size, dtype, shards,
+        tuning mode) — what the ``benchmarks/compare.py`` p99/goodput
+        gate joins on.
 
         The mesh width is part of the key (legacy records without one
         key as 1) so a sharded session never gates against — or
         silently shadows — the single-device baseline when both live
-        in one records directory.
+        in one records directory; the tuning mode (``'static'`` /
+        ``'online'``) separates adaptively-tuned sessions from their
+        static baselines the same way.
         """
         return (self.kernel, self.engine, self.workload, self.size,
-                self.dtype, self.num_shards or 1)
+                self.dtype, self.num_shards or 1, self.tuning_mode)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -373,6 +390,16 @@ def _to_serving_record(raw: Mapping[str, Any], path: str) -> ServingRecord:
             raise ValueError(f"{path}: events must be an object with "
                              f"a 'log' list, got {events!r}")
         events = dict(events)
+    tuning = raw.get("tuning")
+    if tuning is not None:
+        needed = ("mode", "budget", "keys")
+        if not isinstance(tuning, Mapping) or \
+                any(k not in tuning for k in needed) or \
+                not isinstance(tuning.get("keys"), Mapping):
+            raise ValueError(f"{path}: tuning must be an object with "
+                             f"{needed} fields (keys a map), got "
+                             f"{tuning!r}")
+        tuning = dict(tuning)
     trace = _check_trace(raw.get("trace"), path)
     return ServingRecord(
         kernel=str(raw["kernel"]),
@@ -411,6 +438,7 @@ def _to_serving_record(raw: Mapping[str, Any], path: str) -> ServingRecord:
         phases=(dict(phases) if phases is not None else None),
         verdict=verdict,
         events=events,
+        tuning=tuning,
         trace=trace,
         **{k: (float(v) if v is not None else None)
            for k, v in opt.items()},

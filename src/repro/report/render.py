@@ -22,6 +22,12 @@ Turns loaded record sets + claim results into:
   sub-table: wall time of the one ``shard_map`` program, the isolated
   ``ppermute``-ring cost of its halo exchange, and the skew against
   the virtual max-over-shards clock,
+* an **online tuning** section (records with a ``tuning`` payload from
+  ``serve --online-tune``): per-session bandit decisions, regret
+  against the running best, and the router's width trajectory, all
+  replayed by the ``online_ceiling`` claim — plus per-key bandit
+  tables and the router decision log on
+  ``docs/benchmarks/<kernel>-serving-online.md`` pages,
 * an **observability** section (schema-7 ``trace`` blocks): the
   per-(kernel, engine) roofline gauge — achieved GB/s against the
   Eq. 4 bound and achieved FLOP/s against the Eq. 3 ceiling, as
@@ -65,15 +71,24 @@ def _fmt(x, digits: int = 4) -> str:
 def page_name(rs: RecordSet) -> str:
     """The docs/benchmarks/ page filename for one record set.
 
-    Serving sets get a ``-serving`` suffix, mesh sets a ``-mesh<N>``
-    suffix (composable: a mesh serving sweep is
-    ``<kernel>-serving-mesh<N>.md``), so one kernel family's evidence
-    pages never collide.
+    Serving sets get a ``-serving`` suffix, online-tuned serving sets
+    (every record carries a ``tuning`` payload) ``-serving-online``,
+    mesh sets a ``-mesh<N>`` suffix (composable: a mesh serving sweep
+    is ``<kernel>-serving-mesh<N>.md``), so one kernel family's
+    evidence pages never collide.
     """
     suffix = "-serving" if rs.kind == "serving" else ""
+    if _is_online(rs):
+        suffix += "-online"
     if rs.mesh_devices > 1:
         suffix += f"-mesh{rs.mesh_devices}"
     return f"{rs.kernel}{suffix}.md"
+
+
+def _is_online(rs: RecordSet) -> bool:
+    """True when the set holds online-tuned sessions (tuning payloads)."""
+    return rs.kind == "serving" and \
+        any(rec.tuning for rec in rs.records)
 
 
 def _set_label(rs: RecordSet) -> str:
@@ -81,6 +96,8 @@ def _set_label(rs: RecordSet) -> str:
     parts = []
     if rs.kind == "serving":
         parts.append("serving")
+    if _is_online(rs):
+        parts.append("online")
     if rs.mesh_devices > 1:
         parts.append(f"mesh {rs.mesh_devices}")
     return rs.kernel + (f" ({', '.join(parts)})" if parts else "")
@@ -209,6 +226,7 @@ def render_report(recsets: Sequence[RecordSet]) -> str:
         lines.extend(_serving_section(serving))
         lines.extend(_failure_section(serving))
         lines.extend(_verdict_section(serving))
+        lines.extend(_online_section(serving))
     lines.extend(_observability_section(recsets))
     add("## Methodology")
     add("")
@@ -602,6 +620,84 @@ def _verdict_section(serving: Sequence[RecordSet]) -> List[str]:
     return lines
 
 
+def _online_section(serving: Sequence[RecordSet]) -> List[str]:
+    """The REPORT.md online-tuning block (records with ``tuning``).
+
+    One row per ``serve --online-tune`` session: how many bandit keys
+    the session tuned, how many decisions it made, the total regret
+    against the running best (the price of exploration, in µs of batch
+    compute), the router's width trajectory when ``--slo-route`` was
+    on, and the session's p99 against the statically-tuned baseline of
+    the same (kernel, workload, size, dtype) config — adaptivity must
+    pay for itself at the tail.  The ``online_ceiling`` claim replays
+    every decision and holds the Eq. 23/24 line: a bandit may tune
+    tiles, never route memory-bound work onto the matrix engine.
+    """
+    rows = [(rec, crs) for rs in serving for rec, crs in _check_set(rs)
+            if rec.tuning]
+    if not rows:
+        return []
+    static_p99: Dict[Tuple, float] = {}
+    for rs in serving:
+        for rec in rs.records:
+            if not rec.tuning:
+                key = (rec.kernel, rec.workload, rec.size, rec.dtype,
+                       rec.engine)
+                static_p99[key] = rec.p99_ms
+    lines: List[str] = []
+    add = lines.append
+    add("## Online tuning")
+    add("")
+    add("Sessions from `python -m benchmarks.run serve --online-tune "
+        "[--slo-route]`: a budgeted UCB bandit over each family's "
+        "declared `tile_space` re-tunes tile shapes from measured batch "
+        "compute inside the virtual clock, warm-started from the "
+        "committed `tuned.json`; with `--slo-route`, shard width and "
+        "exploration follow queue depth and SLO headroom instead of "
+        "the roofline alone. The `online_ceiling` claim replays every "
+        "recorded decision byte-identically and re-checks Eq. 23/24 on "
+        "each one — an adaptive router never \"discovers\" a "
+        "matrix-engine win the ceiling forbids.")
+    add("")
+    add("| kernel | workload | engine | keys | decisions | regret µs | "
+        "router widths | p99 ms | static p99 ms | goodput /s | claims |")
+    add("|---|---|---|---|---|---|---|---|---|---|---|")
+    fails = 0
+    for rec, crs in rows:
+        t = dict(rec.tuning)
+        fails += sum(1 for c in crs if not c.passed)
+        widths = [int(d.get("width", 1)) for d in
+                  dict(t.get("router") or {}).get("decisions", [])]
+        trajectory = "—"
+        if widths:
+            hops = [widths[0]]
+            for w in widths[1:]:
+                if w != hops[-1]:
+                    hops.append(w)
+            trajectory = "→".join(str(w) for w in hops)
+        baseline = static_p99.get((rec.kernel, rec.workload, rec.size,
+                                   rec.dtype, rec.engine))
+        add("| " + " | ".join([
+            rec.kernel, rec.workload, rec.engine,
+            str(len(dict(t.get("keys", {})))),
+            _fmt(t.get("decisions")), _fmt(t.get("regret_us_total")),
+            trajectory, _fmt(rec.p99_ms), _fmt(baseline),
+            _fmt(rec.goodput_rps), _serving_claim_verdict(crs),
+        ]) + " |")
+    add("")
+    if fails == 0:
+        add(f"**{len(rows)} online-tuned sessions; zero claim "
+            "violations.** Adaptivity changes tiles and shard width, "
+            "never the verdict: every bandit key and every router "
+            "decision stayed on the engine Eq. 23/24 prescribes, and "
+            "the recorded decision sequences replay exactly.")
+    else:
+        add(f"**{fails} claim violation(s) across {len(rows)} "
+            "online-tuned sessions — see per-kernel serving pages.**")
+    add("")
+    return lines
+
+
 def _observability_section(recsets: Sequence[RecordSet]) -> List[str]:
     """The REPORT.md observability block (schema-7 ``trace`` records).
 
@@ -709,10 +805,14 @@ def _engine_pairs(serving: Sequence[RecordSet]):
     """(key, (vector record, matrix record)) pairs for the same session
     config served under both forced engines, sorted by key.  The mesh
     width is part of the key so a sharded session never pairs against
-    the single-device run of the other engine."""
+    the single-device run of the other engine.  Online-tuned sessions
+    are excluded — their engine comes from ``auto``, so they would
+    shadow the forced-vector leg of the same config."""
     by_key: Dict[Tuple, Dict[str, ServingRecord]] = {}
     for rs in serving:
         for rec in rs.records:
+            if rec.tuning:
+                continue
             key = (rec.kernel, rec.workload, rec.size, rec.dtype,
                    rec.num_shards or 1)
             by_key.setdefault(key, {})[rec.engine] = rec
@@ -783,6 +883,62 @@ def render_serving_page(rs: RecordSet) -> str:
                 _fmt(o.get("bytes_frac")),
             ]) + " |")
         add("")
+    for rec, _ in checked:
+        if not rec.tuning:
+            continue
+        t = dict(rec.tuning)
+        router = dict(t.get("router") or {})
+        add(f"## Online tuning — {rec.engine} engine, budget "
+            f"{_fmt(t.get('budget'))}")
+        add("")
+        add(f"{_fmt(t.get('decisions'))} bandit decisions, total regret "
+            f"{_fmt(t.get('regret_us_total'))} µs vs the running best. "
+            "Arm 0 is the warm start (the committed `tuned.json` entry "
+            "when one matches the exact 5-tuple key, the static default "
+            "otherwise); `committed µs` is that entry's offline proxy "
+            "timing — a different clock than the observed interpret "
+            "walls, recorded for provenance, never compared. The "
+            "`online_ceiling` claim replays every event below.")
+        add("")
+        add("| key | arms | pulls | warm | committed µs | warm-obs µs | "
+            "best µs | winner arm | winner tiles |")
+        add("|---|---|---|---|---|---|---|---|---|")
+        for key, kd in sorted(dict(t.get("keys", {})).items()):
+            kd = dict(kd)
+            arms = [dict(a) for a in kd.get("arms", [])]
+            winner = kd.get("winner")
+            tiles = "—"
+            if winner is not None and 0 <= int(winner) < len(arms):
+                tiles = ", ".join(f"{k}={v}" for k, v in
+                                  sorted(arms[int(winner)].items())) \
+                    or "—"
+            add("| " + " | ".join([
+                f"`{key}`", str(len(arms)),
+                _fmt(len(kd.get("events", []))),
+                str(kd.get("warm_source", "—")),
+                _fmt(kd.get("committed_us")), _fmt(kd.get("warm_us")),
+                _fmt(kd.get("best_us")), _fmt(winner), tiles,
+            ]) + " |")
+        add("")
+        if router.get("decisions"):
+            add(f"### Router decisions (SLO {_fmt(router.get('slo_ms'))} "
+                f"ms, max width {_fmt(router.get('max_width'))}, band "
+                f"[{_fmt(router.get('shrink_depth'))}, "
+                f"{_fmt(router.get('grow_depth'))}])")
+            add("")
+            add("| clock s | engine | depth | headroom ms | width | "
+                "explore | reason |")
+            add("|---|---|---|---|---|---|---|")
+            for d in router["decisions"]:
+                d = dict(d)
+                add("| " + " | ".join([
+                    _fmt(d.get("clock_s")), str(d.get("engine")),
+                    _fmt(d.get("queue_depth")),
+                    _fmt(d.get("headroom_ms")), _fmt(d.get("width")),
+                    _fmt(bool(d.get("explore"))),
+                    str(d.get("reason")),
+                ]) + " |")
+            add("")
     for rec, _ in checked:
         if not rec.events:
             continue

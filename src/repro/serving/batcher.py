@@ -145,7 +145,8 @@ class KernelBatchExecutor:
         tiles, so every shard reuses one compiled shape too.
         """
         params = DEFAULT_DISPATCHER.tuning.lookup(
-            kernel, engine, dtype, DEFAULT_DISPATCHER.hw.name)
+            kernel, engine, dtype, DEFAULT_DISPATCHER.hw.name,
+            num_shards=self.num_shards)
         cfg = dict(params.params) if params is not None else {}
         tile = (cfg.get("block_rows", ELEMENTWISE_BLOCK_ROWS)
                 * cfg.get("lanes", ELEMENTWISE_LANES)) * self.num_shards
@@ -176,6 +177,17 @@ class KernelBatchExecutor:
             self._warmed.add(warm_key)
         return self._shard_exec.run(op, *args, engine=engine,
                                     plan=plan, **kwargs).parallel_s
+
+    def _tile_override(self, op, engine: str, dtype: str):
+        """Per-launch tile-config override hook (None = dispatch decides).
+
+        The base executor never overrides: tuned tiles come from the
+        dispatcher's TuningPolicy.  The online-tuning executor
+        (:class:`repro.serving.router.OnlineKernelBatchExecutor`)
+        overrides this to inject the bandit's current arm into
+        full-width packed launches.
+        """
+        return None
 
     def _resolve_engine(self, op, args, kwargs) -> Tuple[str, str]:
         """(engine to run, what 'auto' would pick) via memoized Advice."""
@@ -225,15 +237,20 @@ class KernelBatchExecutor:
             return self._sharded_compute(op, tuple(packed), {}, engine,
                                          plan_key=(op.name, dtype, cap),
                                          warm_key=warm_key)
+        tile = self._tile_override(op, engine, dtype)
+        if tile is not None:
+            warm_key = warm_key + (tuple(sorted(tile.items())),)
+        launch_kw = ({} if tile is None else {"tile_config": dict(tile)})
         if warm_key not in self._warmed:
             # first launch of this compiled shape: compile outside the
             # timed region so p99 measures serving, not tracing
             jax.block_until_ready(op(*packed, engine=engine,
-                                     interpret=self.interpret))
+                                     interpret=self.interpret,
+                                     **launch_kw))
             self._warmed.add(warm_key)
         t0 = time.perf_counter()
         jax.block_until_ready(op(*packed, engine=engine,
-                                 interpret=self.interpret))
+                                 interpret=self.interpret, **launch_kw))
         return time.perf_counter() - t0
 
     def _run_sequential(self, op, batch: Sequence[Request],

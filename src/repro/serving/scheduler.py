@@ -174,8 +174,13 @@ class ContinuousBatchingScheduler:
             triggered = (len(q) >= self.policy.max_batch
                          or clock >= head.arrival_s + self.policy.max_wait_s
                          or draining)
+            # ties on arrival_s break by rid (arrival order): two heads
+            # admitted at the same virtual timestamp must dequeue in
+            # the order they arrived, not dict-insertion order
             if triggered and (best is None
-                              or head.arrival_s < queues[best][0].arrival_s):
+                              or (head.arrival_s, head.rid)
+                              < (queues[best][0].arrival_s,
+                                 queues[best][0].rid)):
                 best = key
         return best
 
@@ -215,6 +220,14 @@ class ContinuousBatchingScheduler:
             q = queues[key]
             batch = [q.popleft()
                      for _ in range(min(self.policy.max_batch, len(q)))]
+            # executors that adapt to load (the SLO router / online
+            # tuner) observe the dequeue signals here, before the
+            # launch; plain executors simply lack the hook
+            notify = getattr(self.executor, "on_dequeue", None)
+            if notify is not None:
+                depth = len(batch) + sum(len(qq)
+                                         for qq in queues.values())
+                notify(batch, clock_s=clock, queue_depth=depth)
             execution = self.executor.execute(batch)
             start, finish = clock, clock + execution.compute_s
             batches.append((batch_id, key, len(batch), start,

@@ -48,6 +48,15 @@ class SessionConfig:
     # execute sharded launches on real devices (MeshExecutor, measured
     # wall time) instead of the virtual clock's modeled max-over-shards
     real_mesh: bool = False
+    # online tile tuning: a budgeted bandit re-tunes from measured
+    # batch compute times (repro.tuning.online), warm-started from the
+    # committed tuned.json; the record gains a `tuning` block
+    online_tune: bool = False
+    # SLO-aware routing: shard width + exploration gating from queue
+    # depth and SLO headroom (repro.serving.router.SLORouter);
+    # requires online_tune
+    slo_route: bool = False
+    tune_budget: int = 8         # bandit exploration pulls per key
 
 
 def run_session(cfg: SessionConfig, executor=None,
@@ -63,7 +72,30 @@ def run_session(cfg: SessionConfig, executor=None,
     memoized Advice (Eq. 2 intensity, Eq. 4 boundedness, the
     Eq. 17/23/24 ceiling, §6 auto-routing) onto the summary.
     """
-    if executor is None:
+    if cfg.slo_route and not cfg.online_tune:
+        raise ValueError("slo_route requires online_tune: the router's "
+                         "exploration gate drives the online tuner")
+    restore_mesh = None
+    if executor is None and cfg.online_tune:
+        if cfg.num_shards != 1 or cfg.real_mesh:
+            raise ValueError(
+                "online_tune owns the mesh width (the router grows and "
+                "shrinks it); start from num_shards=1, virtual clock")
+        from ..core.dispatch import DEFAULT_DISPATCHER
+        from ..tuning.online import OnlineTuner
+        from .router import OnlineKernelBatchExecutor, SLORouter
+        tuner = OnlineTuner(cfg.tune_budget,
+                            cache=DEFAULT_DISPATCHER.tuning.cache,
+                            hw_model=DEFAULT_DISPATCHER.hw.name)
+        router = SLORouter(slo_ms=cfg.slo.latency_ms) if cfg.slo_route \
+            else None
+        executor = OnlineKernelBatchExecutor(
+            engine=cfg.engine, max_batch=cfg.policy.max_batch,
+            seed=cfg.seed, tuner=tuner, router=router)
+        # the router mutates the global dispatcher's mesh width; put
+        # it back so later sessions start from the configured state
+        restore_mesh = executor.dispatcher
+    elif executor is None:
         executor = KernelBatchExecutor(engine=cfg.engine,
                                        max_batch=cfg.policy.max_batch,
                                        seed=cfg.seed,
@@ -75,8 +107,12 @@ def run_session(cfg: SessionConfig, executor=None,
                               dtype=cfg.dtype, seed=cfg.seed,
                               trace_path=cfg.trace_path)
     scheduler = ContinuousBatchingScheduler(executor, cfg.policy)
-    with trace_capture() as view:
-        log = scheduler.run(source, cfg.duration_s)
+    try:
+        with trace_capture() as view:
+            log = scheduler.run(source, cfg.duration_s)
+    finally:
+        if restore_mesh is not None:
+            restore_mesh.set_mesh(1)
     trace = trace_payload(view.events, log)
     summary = summarize(log, cfg.slo)
     advice = executor.advice_for(cfg.kernel, cfg.size, cfg.dtype)
@@ -106,5 +142,6 @@ def run_session(cfg: SessionConfig, executor=None,
         mesh_exec_mode=(("mesh" if cfg.real_mesh else "virtual")
                         if cfg.num_shards > 1 else None),
         model=extras.get("model"), phases=extras.get("phases"),
-        verdict=extras.get("verdict"), trace=trace)
+        verdict=extras.get("verdict"), tuning=extras.get("tuning"),
+        trace=trace)
     return log, summary, record

@@ -15,14 +15,20 @@ winners:
 * :mod:`repro.tuning.proxy` — pure-XLA timing proxies that reproduce
   the tiling pipeline without Pallas interpret mode (whose wall times
   measure the emulator, not the hardware).
+* :mod:`repro.tuning.online` — the budgeted deterministic UCB bandit
+  that re-tunes tiles from live serving batch compute times,
+  warm-started from the committed cache and persisted back through
+  the faster-wins merge.
 
 CLI entry point: ``python -m benchmarks.run tune``.
 """
 from .cache import (CACHE_SCHEMA, InterpretTimingError, TunedEntry,
-                    TuningCache, env_fingerprint)
+                    TuningCache, env_fingerprint, shard_shape_of)
+from .online import OnlineTuner, replay
 from .tuner import candidates, default_params, tune_op
 
 __all__ = [
-    "CACHE_SCHEMA", "InterpretTimingError", "TunedEntry", "TuningCache",
-    "candidates", "default_params", "env_fingerprint", "tune_op",
+    "CACHE_SCHEMA", "InterpretTimingError", "OnlineTuner", "TunedEntry",
+    "TuningCache", "candidates", "default_params", "env_fingerprint",
+    "replay", "shard_shape_of", "tune_op",
 ]

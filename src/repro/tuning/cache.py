@@ -1,23 +1,33 @@
 """Versioned ``tuned.json`` cache of winning tile configurations.
 
 One :class:`TunedEntry` per (kernel family, engine, dtype, hardware
-model) — the granularity at which a tile choice is transferable: array
-*values* never move a kernel on the roofline (paper §2.3) and the sweep
-sizes share one bandwidth regime, so the cache deliberately does not
-key on size.
+model, shard shape) — the granularity at which a tile choice is
+transferable: array *values* never move a kernel on the roofline
+(paper §2.3) and the sweep sizes share one bandwidth regime, so the
+cache deliberately does not key on size.  It *does* key on the shard
+shape (``"full"`` for an unsharded launch, ``"2-way"`` etc. for a
+mesh-split one): a shard sees 1/N of the rows, so its winning tile is
+generally narrower than the full-width winner, and schema 1's
+four-field key silently served full-width tiles to sharded launches.
 
-File format (schema 1)::
+File format (schema 2)::
 
     {
-      "schema": 1,
+      "schema": 2,
       "fingerprint": {"jax": ..., "numpy": ..., "device": ..., ...},
       "entries": [
         {"kernel": "scale", "engine": "vector", "dtype": "float32",
          "hw_model": "TPU-v5e", "params": {"block_rows": 128,
          "lanes": 512}, "best_us": 410.2, "default_us": 512.9,
-         "size": 4194304, "source": "xla-proxy", "budget": 8}, ...
+         "size": 4194304, "source": "xla-proxy", "budget": 8,
+         "shard_shape": "full"}, ...
       ]
     }
+
+Schema-1 files (no ``shard_shape``) still load: every legacy entry is
+a full-width measurement, so :meth:`TuningCache.load` maps them to
+``shard_shape="full"`` and emits a deprecation
+:class:`TuningCacheWarning` asking for a re-save.
 
 Load rules (the dispatch layer must never crash because a cache file
 is bad): corrupted JSON, an unknown schema, or a malformed entry list
@@ -31,8 +41,9 @@ every consumer re-validates configs against the family's declared
 
 Merge semantics (``TuningCache.merge``): entries present on either
 side survive; when both sides carry the same key the *faster* entry
-(lower ``best_us``) wins, so repeated ``--out tuned.json`` runs only
-ever tighten the cache.
+(lower ``best_us``) wins, so repeated ``--out tuned.json`` runs — and
+online-tuned winners persisted from serving sessions
+(:mod:`repro.tuning.online`) — only ever tighten the cache.
 """
 from __future__ import annotations
 
@@ -44,22 +55,43 @@ from typing import Any, Dict, Iterable, Mapping, Optional, Tuple
 
 __all__ = [
     "CACHE_SCHEMA", "InterpretTimingError", "TunedEntry", "TuningCache",
-    "TuningCacheWarning", "env_fingerprint",
+    "TuningCacheWarning", "env_fingerprint", "shard_shape_of",
 ]
 
 #: Version of the tuned.json file format.
-CACHE_SCHEMA = 1
+CACHE_SCHEMA = 2
+#: The pre-shard_shape format still accepted (with a warning) on load.
+LEGACY_CACHE_SCHEMA = 1
 
 #: Entry ``source`` tag meaning "timed via the pure-XLA tiling proxy".
 SOURCE_PROXY = "xla-proxy"
 #: Entry ``source`` tag meaning "timed via real (non-interpret) Pallas".
 SOURCE_PALLAS = "pallas"
+#: Entry ``source`` tag for winners measured by the online bandit from
+#: live batch compute times (:mod:`repro.tuning.online`).
+SOURCE_ONLINE = "online"
 #: Entry ``source`` tag for interpret-mode Pallas timings.  Never
 #: persisted: interpret wall times measure the emulator's Python loop,
 #: so a tile choice based on them is noise.
 SOURCE_PALLAS_INTERPRET = "pallas-interpret"
 
-Key = Tuple[str, str, str, str]  # (kernel, engine, dtype, hw_model)
+#: Shard shape of an unsharded (single-device, full-width) launch.
+FULL_SHARD_SHAPE = "full"
+
+Key = Tuple[str, str, str, str, str]
+#: (kernel, engine, dtype, hw_model, shard_shape)
+
+
+def shard_shape_of(num_shards: int) -> str:
+    """The cache's shard-shape label for an *num_shards*-way launch.
+
+    ``"full"`` for 1 (or fewer) shards, ``"<N>-way"`` otherwise — the
+    granularity at which a tuned tile transfers between launches: a
+    shard of a 2-way split sees half the rows regardless of which mesh
+    axis produced it.
+    """
+    n = int(num_shards)
+    return FULL_SHARD_SHAPE if n <= 1 else f"{n}-way"
 
 
 class TuningCacheWarning(UserWarning):
@@ -92,13 +124,16 @@ def env_fingerprint() -> Dict[str, str]:
 
 @dataclasses.dataclass(frozen=True)
 class TunedEntry:
-    """One winning tile configuration for (kernel, engine, dtype, hw).
+    """One winning tile configuration for (kernel, engine, dtype, hw,
+    shard shape).
 
     ``params`` are the keyword arguments the family's engine entry
     points accept (e.g. ``{"block_rows": 128, "lanes": 512}``);
     ``best_us`` / ``default_us`` are the tuner's median wall times for
     the winner and for the static default, so consumers can render the
-    tuned-vs-default delta without re-measuring.
+    tuned-vs-default delta without re-measuring.  ``shard_shape``
+    scopes the entry to a launch width (``"full"`` or ``"<N>-way"``):
+    per-shard winners and full-width winners never collide.
     """
 
     kernel: str
@@ -111,11 +146,13 @@ class TunedEntry:
     size: int          # input size the search timed
     source: str = SOURCE_PROXY
     budget: int = 0    # candidate budget the search ran under
+    shard_shape: str = FULL_SHARD_SHAPE
 
     @property
     def key(self) -> Key:
-        """The cache key (kernel, engine, dtype, hw_model)."""
-        return (self.kernel, self.engine, self.dtype, self.hw_model)
+        """The cache key (kernel, engine, dtype, hw_model, shard_shape)."""
+        return (self.kernel, self.engine, self.dtype, self.hw_model,
+                self.shard_shape)
 
     @property
     def speedup(self) -> float:
@@ -130,7 +167,11 @@ class TunedEntry:
 
     @classmethod
     def from_json(cls, raw: Mapping[str, Any]) -> "TunedEntry":
-        """Parse one entry dict; raises on missing fields / bad types."""
+        """Parse one entry dict; raises on missing fields / bad types.
+
+        ``shard_shape`` defaults to ``"full"`` so schema-1 entries
+        (which predate sharded tuning) parse as full-width winners.
+        """
         return cls(
             kernel=str(raw["kernel"]), engine=str(raw["engine"]),
             dtype=str(raw["dtype"]), hw_model=str(raw["hw_model"]),
@@ -141,6 +182,7 @@ class TunedEntry:
             size=int(raw["size"]), source=str(raw.get("source",
                                                       SOURCE_PROXY)),
             budget=int(raw.get("budget", 0)),
+            shard_shape=str(raw.get("shard_shape", FULL_SHARD_SHAPE)),
         )
 
 
@@ -179,9 +221,18 @@ class TuningCache:
         return entry
 
     def lookup(self, kernel: str, engine: str, dtype: str,
-               hw_model: str) -> Optional[TunedEntry]:
-        """The winning entry for this key, or None (use static defaults)."""
-        return self._entries.get((kernel, engine, dtype, hw_model))
+               hw_model: str,
+               shard_shape: str = FULL_SHARD_SHAPE
+               ) -> Optional[TunedEntry]:
+        """The winning entry for this key, or None (use static defaults).
+
+        The lookup is exact on ``shard_shape``: a sharded launch never
+        silently inherits the full-width tile (the schema-1 collision
+        this key fixed), it falls back to the family's static defaults
+        until a per-shard winner exists.
+        """
+        return self._entries.get(
+            (kernel, engine, dtype, hw_model, shard_shape))
 
     def merge(self, other: "TuningCache") -> "TuningCache":
         """Fold *other* into self: faster ``best_us`` wins per key.
@@ -201,7 +252,7 @@ class TuningCache:
     # -- persistence -------------------------------------------------------
 
     def save(self, path: str) -> str:
-        """Write the cache as schema-1 tuned.json (merging is caller's
+        """Write the cache as schema-2 tuned.json (merging is caller's
         job: see ``load_or_warn`` + ``merge``)."""
         payload = {
             "schema": CACHE_SCHEMA,
@@ -218,17 +269,29 @@ class TuningCache:
 
     @classmethod
     def load(cls, path: str) -> "TuningCache":
-        """Strict load: raises ValueError/OSError on any problem."""
+        """Strict load: raises ValueError/OSError on any problem.
+
+        Schema-1 files (the pre-``shard_shape`` format) are migrated
+        in memory — every entry keys as a full-width winner — with a
+        deprecation :class:`TuningCacheWarning` asking for a re-save;
+        they never crash an existing workflow.
+        """
         with open(path) as f:
             payload = json.load(f)
         if not isinstance(payload, dict):
             raise ValueError(f"{path}: expected an object, got "
                              f"{type(payload).__name__}")
         schema = payload.get("schema")
-        if schema != CACHE_SCHEMA:
+        if schema not in (CACHE_SCHEMA, LEGACY_CACHE_SCHEMA):
             raise ValueError(f"{path}: unsupported tuned.json schema "
                              f"{schema!r} (this build reads "
-                             f"{CACHE_SCHEMA})")
+                             f"{LEGACY_CACHE_SCHEMA} and {CACHE_SCHEMA})")
+        if schema == LEGACY_CACHE_SCHEMA:
+            warnings.warn(
+                f"tuned cache {path!r} is schema {LEGACY_CACHE_SCHEMA} "
+                "(no shard_shape); loading its entries as full-width "
+                "winners — re-save to upgrade to schema "
+                f"{CACHE_SCHEMA}", TuningCacheWarning, stacklevel=2)
         raw_entries = payload.get("entries")
         if not isinstance(raw_entries, list):
             raise ValueError(f"{path}: missing its 'entries' list")

@@ -47,14 +47,17 @@ def test_ci_matrix_split():
     wf = _load("ci.yml")
     jobs = wf["jobs"]
     assert set(jobs) == {"lint-unit", "mesh-smoke", "lm-smoke",
-                         "chaos-smoke", "trace-smoke", "slow"}
+                         "chaos-smoke", "trace-smoke", "online-smoke",
+                         "slow"}
 
     lint = jobs["lint-unit"]
     matrix = lint["strategy"]["matrix"]["python-version"]
     assert matrix == ["3.10", "3.11", "3.12"]
     runs = _run_text(lint)
-    # the fast job must exclude the distributed suite and lint the tree
-    assert "--ignore=tests/test_distributed.py" in runs
+    # the fast job deselects the distributed tier by marker (the tiers
+    # are declared in pyproject [tool.pytest.ini_options].markers) and
+    # lints the tree
+    assert 'pytest -q -m "not distributed"' in runs
     assert "ruff check" in runs
     assert "ruff format --check" in runs
     # ... and still regenerate + drift-check the claims report
@@ -62,6 +65,7 @@ def test_ci_matrix_split():
     assert "git diff --exit-code REPORT.md" in runs
 
     slow = jobs["slow"]
+    assert "-m distributed" in _run_text(slow)
     assert "tests/test_distributed.py" in _run_text(slow)
     # the fast job must NOT run the full tier-1 suite (that is the
     # point of the split)
@@ -200,6 +204,46 @@ def test_ci_model_tier_named_step():
     runs = _run_text(_load("ci.yml")["jobs"]["lint-unit"])
     assert "tests/test_model_engine.py" in runs
     assert "tests/test_model_verdict.py" in runs
+
+
+def test_pytest_tier_markers_declared():
+    """The tier markers the CI -m filters select on must be declared
+    in pyproject (an undeclared marker is a silent no-op filter)."""
+    pyproject = pathlib.Path(__file__).resolve().parent.parent / \
+        "pyproject.toml"
+    text = pyproject.read_text()
+    # text-level check (tomllib is 3.11+; the matrix floor is 3.10):
+    # each tier must appear as a "<name>: ..." marker declaration
+    assert "markers = [" in text
+    for tier in ("unit", "model", "distributed", "property"):
+        assert f'"{tier}: ' in text, f"marker {tier!r} not declared"
+
+
+def test_ci_online_smoke_job():
+    """The online-tuning smoke: serve --online-tune --slo-route on the
+    two cheapest families, warm-started from the committed tuned.json,
+    gated (incl. the online_ceiling claim replay and the regret gate)
+    against the committed online baseline.  Bare traffic knobs are
+    load-bearing: tune_budget is a comparability knob, so compare.py
+    refuses a drifted exploration budget."""
+    job = _load("ci.yml")["jobs"]["online-smoke"]
+    runs = _run_text(job)
+    assert "benchmarks.run serve --online-tune --slo-route" in runs
+    assert "--kernels scale,axpy" in runs
+    assert "--tuned tuned.json" in runs
+    assert "--out runs-ci-online" in runs
+    assert "benchmarks.compare runs runs-ci-online" in runs
+    assert "--kind serving --mesh 1" in runs
+    # no traffic/budget knobs on the serve command (defaults must
+    # match the committed online baseline exactly)
+    serve_line = next(line for line in runs.splitlines()
+                      if "benchmarks.run serve" in line)
+    for knob in ("--rate", "--duration", "--max-batch", "--slo-ms",
+                 "--seed", "--size", "--tune-budget"):
+        assert knob not in serve_line
+    uploads = [s for s in job["steps"]
+               if "upload-artifact" in s.get("uses", "")]
+    assert uploads and "runs-ci-online" in uploads[0]["with"]["path"]
 
 
 def test_nightly_covers_committed_mesh_widths():

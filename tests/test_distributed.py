@@ -23,6 +23,8 @@ import pytest
 
 REPO = Path(__file__).resolve().parent.parent
 
+pytestmark = pytest.mark.distributed
+
 
 def run_sub(body: str, devices: int = 8, timeout: int = 600) -> str:
     prog = textwrap.dedent(f"""

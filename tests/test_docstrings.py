@@ -28,6 +28,8 @@ MODULES = (
     "repro.serving.session",
     "repro.serving.slo",
     "repro.serving.elastic",
+    "repro.serving.router",
+    "repro.tuning.online",
     "repro.runtime.checkpoint",
     "repro.runtime.elastic",
     "repro.sharding",
@@ -61,6 +63,8 @@ PAPER_CITED = (
     ("repro.serving.batcher", "KernelBatchExecutor"),
     ("repro.serving.metrics", "serving_record"),
     ("repro.serving.session", "run_session"),
+    ("repro.serving.router", "SLORouter"),
+    ("repro.tuning.online", "OnlineTuner"),
     ("repro.sharding.plan", "ShardSpec"),
     ("repro.sharding.plan", "ShardPlan"),
     ("repro.sharding.plan", "plan_for"),

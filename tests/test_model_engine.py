@@ -29,6 +29,8 @@ from repro.configs import get_arch, reduced
 from repro.models import DecodeEngine, ModelConfig
 from repro.models import lm
 
+pytestmark = pytest.mark.model
+
 jax.config.update("jax_platform_name", "cpu")
 
 #: Tiny dense config the numpy oracle re-implements: GQA (2 query

@@ -30,6 +30,8 @@ from repro.report.claims import (MODEL_CLAIMS, SERVING_CLAIMS,
 from repro.report.records import load_file
 from repro.report.render import _verdict_section
 
+pytestmark = pytest.mark.model
+
 HW = DEFAULT_DISPATCHER.hw
 GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
                       "verdict_section.md")

@@ -15,8 +15,10 @@ from repro.core.dispatch import (DEFAULT_DISPATCHER, Dispatcher,
 from repro.kernels import registry
 from repro.tuning import (CACHE_SCHEMA, InterpretTimingError, TunedEntry,
                           TuningCache, candidates, default_params,
-                          env_fingerprint, tune_op)
-from repro.tuning.cache import SOURCE_PALLAS_INTERPRET, TuningCacheWarning
+                          env_fingerprint, shard_shape_of, tune_op)
+from repro.tuning.cache import (LEGACY_CACHE_SCHEMA,
+                                SOURCE_PALLAS_INTERPRET,
+                                TuningCacheWarning)
 
 HW = DEFAULT_DISPATCHER.hw.name
 
@@ -100,6 +102,68 @@ def test_stale_fingerprint_warns_but_keeps_entries(tmp_path):
     with pytest.warns(TuningCacheWarning, match="different environment"):
         loaded = TuningCache.load_or_warn(str(path))
     assert len(loaded) == 1
+
+
+def test_sharded_lookup_never_inherits_full_width():
+    """Regression for the schema-1 key collision: a sharded launch must
+    fall back to static defaults, never silently launch the full-width
+    winner's tiles (tuned for a shard N times larger).
+
+    Under the old 4-field key this lookup returned ``_entry()`` and the
+    4-way shards ran full-width tiles; the 5-field key (shard_shape)
+    makes it None until a per-shard winner exists."""
+    cache = TuningCache([_entry()])
+    assert cache.lookup("scale", "vector", "float32", HW) == _entry()
+    assert cache.lookup("scale", "vector", "float32", HW,
+                        shard_shape_of(4)) is None
+    # a per-shard winner keys separately and never clobbers full-width
+    per_shard = _entry(shard_shape=shard_shape_of(4),
+                       params={"block_rows": 64, "lanes": 256},
+                       best_us=4.0)
+    cache.add(per_shard)
+    assert cache.lookup("scale", "vector", "float32", HW,
+                        shard_shape_of(4)) == per_shard
+    assert cache.lookup("scale", "vector", "float32", HW) == _entry()
+    # the policy layer dispatch consults scopes by num_shards the same
+    policy = TuningPolicy(cache=cache)
+    assert policy.lookup("scale", "vector", "float32", HW,
+                         num_shards=4) == per_shard
+    assert policy.lookup("scale", "vector", "float32", HW,
+                         num_shards=2) is None
+    assert policy.lookup("scale", "vector", "float32", HW) == _entry()
+
+
+def test_schema1_cache_migrates_with_deprecation_warning(tmp_path):
+    """A schema-1 tuned.json (pre-shard_shape) must load — entries
+    migrate in memory as full-width winners — with a deprecation
+    warning, not a crash; re-saving upgrades the file to schema 2."""
+    path = tmp_path / "tuned.json"
+    legacy = _entry().to_json()
+    del legacy["shard_shape"]  # the field schema 1 didn't have
+    path.write_text(json.dumps({"schema": LEGACY_CACHE_SCHEMA,
+                                "fingerprint": env_fingerprint(),
+                                "entries": [legacy]}))
+    with pytest.warns(TuningCacheWarning, match="schema 1"):
+        cache = TuningCache.load(str(path))
+    got = cache.lookup("scale", "vector", "float32", HW)
+    assert got == _entry()
+    assert got.shard_shape == "full"
+    # and no entry leaked into a sharded key
+    assert cache.lookup("scale", "vector", "float32", HW,
+                        shard_shape_of(2)) is None
+    # re-save upgrades the on-disk format
+    out = tmp_path / "tuned2.json"
+    cache.save(str(out))
+    payload = json.loads(out.read_text())
+    assert payload["schema"] == CACHE_SCHEMA
+    assert payload["entries"][0]["shard_shape"] == "full"
+    import warnings
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        upgraded = TuningCache.load(str(out))
+    assert not [w for w in caught
+                if issubclass(w.category, TuningCacheWarning)]
+    assert len(upgraded) == 1
 
 
 def test_interpret_timings_refused():
@@ -281,8 +345,14 @@ def test_committed_tuned_json_is_valid():
     """The repo-root tuned.json the CI sweep consumes must load
     strictly and cover every tunable family."""
     import pathlib
+    import warnings
     path = pathlib.Path(__file__).resolve().parent.parent / "tuned.json"
-    cache = TuningCache.load(str(path))
+    # the committed file must be current-schema (a schema-1 file still
+    # loads, but with a deprecation warning — not acceptable committed)
+    assert json.loads(path.read_text())["schema"] == CACHE_SCHEMA
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", TuningCacheWarning)
+        cache = TuningCache.load(str(path))
     tunable = {op.name for op in registry.all_ops() if op.tile_space}
     assert {e.kernel for e in cache} == tunable
     for e in cache:
